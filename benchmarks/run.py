@@ -1,0 +1,29 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived,paper_claim`` CSV.  Run with
+``PYTHONPATH=src python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks.tables import ALL_TABLES
+
+    print("name,us_per_call,derived,paper_claim")
+    failures = 0
+    for fn in ALL_TABLES:
+        try:
+            for name, us, derived, claim in fn():
+                d = f"{derived:.6g}" if isinstance(derived, float) else derived
+                print(f'{name},{us:.1f},{d},"{claim}"')
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f'{fn.__name__},0,ERROR,"{e}"', file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

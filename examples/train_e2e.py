@@ -1,0 +1,51 @@
+"""End-to-end training driver example: train a reduced-config model for a few
+hundred steps on the deterministic synthetic stream, with checkpointing and a
+kill-resume demonstration (fault tolerance).
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--arch granite-8b] [--steps 300]
+
+Loss must drop substantially from its initial value (the stream has Zipf +
+copy-run structure), proving the whole substrate — data, model, optimizer,
+checkpoints — learns end to end.
+"""
+import argparse
+import shutil
+import tempfile
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="ita_e2e_")
+    try:
+        # phase 1: train halfway, checkpointing
+        half = args.steps // 2
+        print(f"=== phase 1: steps 0..{half} ===")
+        r1 = train_mod.main([
+            "--arch", args.arch, "--smoke", "--steps", str(half),
+            "--batch", "16", "--seq", "128", "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", "20", "--lr", "3e-3",
+        ])
+        # phase 2: "restart after preemption" — resume from checkpoint
+        print(f"=== phase 2: resume -> step {args.steps} ===")
+        r2 = train_mod.main([
+            "--arch", args.arch, "--smoke", "--steps", str(args.steps),
+            "--batch", "16", "--seq", "128", "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", "20", "--lr", "3e-3", "--resume",
+        ])
+        drop = r1["first_loss"] - r2["last_loss"]
+        print(f"\nloss {r1['first_loss']:.3f} -> {r2['last_loss']:.3f} "
+              f"(drop {drop:.3f}) across a checkpoint/restart boundary")
+        assert drop > 0.5, "training did not learn"
+        print("OK: end-to-end training + fault-tolerant restart works")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Arch configs (one module per assigned architecture) + registry."""
+from repro.configs.base import *  # noqa: F401,F403
+from repro.configs.registry import ASSIGNED, CONFIGS, get_config  # noqa: F401

@@ -1,0 +1,13 @@
+"""Architecture config: granite-8b.
+
+Exact figures from the assignment; see ``source=`` for provenance.
+"""
+from repro.configs.base import (ITAConfig, LayerSpec, ModelConfig, MoEConfig,
+                                ParallelConfig, SSMConfig)
+from repro.configs.common import PAR_BIG, PAR_SMALL
+
+CONFIG = ModelConfig(
+    name="granite-8b", family="lm",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=49152,
+    parallel=PAR_BIG, source="arXiv:2405.04324")

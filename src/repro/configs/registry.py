@@ -1,0 +1,54 @@
+"""Config registry: aggregates the per-arch modules.
+
+One module per assigned architecture (assignment requirement), plus the
+paper's own two models (TinyLlama-1.1B / Llama-2-7B, Table IV).
+"""
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs import phi3_5_moe_42b_a6_6b as _phi3_5_moe_42b_a6_6b
+from repro.configs import qwen3_moe_235b_a22b as _qwen3_moe_235b_a22b
+from repro.configs import stablelm_1_6b as _stablelm_1_6b
+from repro.configs import minitron_8b as _minitron_8b
+from repro.configs import gemma2_27b as _gemma2_27b
+from repro.configs import granite_8b as _granite_8b
+from repro.configs import seamless_m4t_medium as _seamless_m4t_medium
+from repro.configs import hymba_1_5b as _hymba_1_5b
+from repro.configs import rwkv6_7b as _rwkv6_7b
+from repro.configs import llama_3_2_vision_11b as _llama_3_2_vision_11b
+from repro.configs import tinyllama_1_1b as _tinyllama_1_1b
+from repro.configs import llama2_7b as _llama2_7b
+
+CONFIGS: Dict[str, ModelConfig] = {
+    "phi3.5-moe-42b-a6.6b": _phi3_5_moe_42b_a6_6b.CONFIG,
+    "qwen3-moe-235b-a22b": _qwen3_moe_235b_a22b.CONFIG,
+    "stablelm-1.6b": _stablelm_1_6b.CONFIG,
+    "minitron-8b": _minitron_8b.CONFIG,
+    "gemma2-27b": _gemma2_27b.CONFIG,
+    "granite-8b": _granite_8b.CONFIG,
+    "seamless-m4t-medium": _seamless_m4t_medium.CONFIG,
+    "hymba-1.5b": _hymba_1_5b.CONFIG,
+    "rwkv6-7b": _rwkv6_7b.CONFIG,
+    "llama-3.2-vision-11b": _llama_3_2_vision_11b.CONFIG,
+    "tinyllama-1.1b": _tinyllama_1_1b.CONFIG,
+    "llama2-7b": _llama2_7b.CONFIG,
+}
+
+ASSIGNED = [
+    "phi3.5-moe-42b-a6.6b",
+    "qwen3-moe-235b-a22b",
+    "stablelm-1.6b",
+    "minitron-8b",
+    "gemma2-27b",
+    "granite-8b",
+    "seamless-m4t-medium",
+    "hymba-1.5b",
+    "rwkv6-7b",
+    "llama-3.2-vision-11b",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

@@ -1,0 +1,13 @@
+"""Architecture config: rwkv6-7b.
+
+Exact figures from the assignment; see ``source=`` for provenance.
+"""
+from repro.configs.base import (ITAConfig, LayerSpec, ModelConfig, MoEConfig,
+                                ParallelConfig, SSMConfig)
+from repro.configs.common import PAR_BIG, PAR_SMALL
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="rwkv",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64, head_dim=64,
+    d_ff=14336, vocab_size=65536, supports_long_context=True,
+    parallel=PAR_BIG, source="arXiv:2404.05892")

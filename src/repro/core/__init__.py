@@ -1,0 +1,2 @@
+"""ITA core: CSD synthesis, logic-aware quantization, cost models, split-brain."""
+from repro.core import costmodel, csd, fpga, quant, splitbrain  # noqa: F401

@@ -1,0 +1,149 @@
+"""Logic-Aware Quantization (LAQ) — the paper's §IV-C in software.
+
+Pipeline (per weight matrix):
+  1. symmetric per-output-channel INT4 quantization (scale = amax/7),
+  2. zero-weight pruning: |w| below ``prune_threshold`` * scale is forced to
+     zero, deleting the MAC entirely (§IV-C.3; paper threshold 2^-6 of the
+     full-scale range, claimed to catch 15-25% of weights),
+  3. logic-aware rounding: between the two nearest INT4 codes, prefer the
+     one whose CSD encoding needs fewer adders when the extra quantization
+     error is below ``laq_slack`` of the scale (this is the "exploiting
+     knowledge of weight values during synthesis" step).
+
+Activations are INT8 symmetric per-tensor (§V-C), with a dynamic-range
+fallback used by the serving path.
+
+All functions are functional and jittable; weights-side tables come from
+``core.csd`` and are baked in as constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csd
+
+__all__ = [
+    "QuantizedLinear",
+    "quantize_weights",
+    "dequantize",
+    "quantize_activations_int8",
+    "w4a8_matmul_ref",
+    "pruned_fraction",
+]
+
+INT4_MIN, INT4_MAX = -7, 7  # symmetric grid keeps the CSD tables balanced
+DEFAULT_PRUNE_THRESHOLD = 2.0 ** -6  # §IV-C.3, fraction of full scale
+DEFAULT_LAQ_SLACK = 0.35  # extra quant error allowed (in units of scale) to buy a cheaper CSD code
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass
+class QuantizedLinear:
+    """An INT4 weight matrix plus per-channel scales — the 'hardwired' layer.
+
+    ``codes`` is int8 storage of INT4 values in [-7, 7]; ``scales`` is
+    float32 of shape ``codes.shape[-1]`` (per output channel).
+
+    Registered WITH key paths so the sharding-rules engine sees
+    ``.../w1/codes`` (sharded like the weight) and ``.../w1/scales``.
+    """
+
+    codes: jnp.ndarray
+    scales: jnp.ndarray
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("codes"), self.codes),
+                 (jax.tree_util.GetAttrKey("scales"), self.scales)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+
+def _csd_cost_lut() -> jnp.ndarray:
+    """cost[i] = CSD adder count of value (i-8), for int4 codes."""
+    return jnp.asarray(csd.csd_cost_table(4), jnp.int32)
+
+
+def quantize_weights(
+    w: jnp.ndarray,
+    *,
+    prune_threshold: float = DEFAULT_PRUNE_THRESHOLD,
+    laq_slack: float = DEFAULT_LAQ_SLACK,
+    logic_aware: bool = True,
+) -> QuantizedLinear:
+    """Quantize a (in, out) weight matrix to LAQ INT4."""
+    w = jnp.asarray(w, jnp.float32)
+    scales = jnp.max(jnp.abs(w), axis=0, keepdims=True) / INT4_MAX
+    scales = jnp.maximum(scales, 1e-12)
+    x = w / scales
+
+    lo = jnp.clip(jnp.floor(x), INT4_MIN, INT4_MAX)
+    hi = jnp.clip(lo + 1, INT4_MIN, INT4_MAX)
+    err_lo = jnp.abs(x - lo)
+    err_hi = jnp.abs(x - hi)
+
+    if logic_aware:
+        cost = _csd_cost_lut()
+        cost_lo = cost[(lo + 8).astype(jnp.int32)]
+        cost_hi = cost[(hi + 8).astype(jnp.int32)]
+        # Nearest code, unless the other code is CSD-cheaper and the error
+        # penalty stays within the slack budget.
+        nearest_is_lo = err_lo <= err_hi
+        prefer_lo = (cost_lo < cost_hi) & (err_lo <= err_hi + laq_slack)
+        prefer_hi = (cost_hi < cost_lo) & (err_hi <= err_lo + laq_slack)
+        take_lo = jnp.where(prefer_lo, True, jnp.where(prefer_hi, False, nearest_is_lo))
+    else:
+        take_lo = err_lo <= err_hi
+    q = jnp.where(take_lo, lo, hi).astype(jnp.int8)
+
+    # Zero-weight pruning: synthesis deletes the MAC (§IV-C.3).  Threshold is
+    # a fraction of the *full scale* range of the channel, matching the
+    # paper's |w| < 2^-6 rule for weights normalized to [-1, 1].
+    full_scale = scales * INT4_MAX
+    q = jnp.where(jnp.abs(w) < prune_threshold * full_scale, 0, q).astype(jnp.int8)
+    return QuantizedLinear(codes=q, scales=scales[0].astype(jnp.float32))
+
+
+def dequantize(ql: QuantizedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (ql.codes.astype(jnp.float32) * ql.scales).astype(dtype)
+
+
+def quantize_activations_int8(x: jnp.ndarray):
+    """Symmetric per-row (token) INT8 activation quantization."""
+    x = jnp.asarray(x, jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def w4a8_matmul_ref(x: jnp.ndarray, ql: QuantizedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Reference W4A8 matmul: int8 activations x int4 weights, int32 accum.
+
+    This is the functional model of the ITA device datapath: activations are
+    INT8, weights are the hardwired INT4 codes, accumulation is exact int32,
+    and the result is rescaled by (act_scale * weight_scale).  The Pallas
+    kernel in ``kernels/w4a8_matmul.py`` must match it bit-for-bit on the
+    integer part.
+    """
+    qx, act_scale = quantize_activations_int8(x)
+    acc = jax.lax.dot_general(
+        qx, ql.codes,
+        (((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * act_scale * ql.scales).astype(dtype)
+
+
+def pruned_fraction(ql: QuantizedLinear) -> jnp.ndarray:
+    return jnp.mean((ql.codes == 0).astype(jnp.float32))

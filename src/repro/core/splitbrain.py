@@ -1,0 +1,145 @@
+"""The Split-Brain protocol (§IV-B, §VI-C): partition + traffic/latency model.
+
+Two halves:
+  * ``TrafficModel`` — the analytical bandwidth/latency model reproducing
+    eq. 7-11 and Table III for any architecture config (not just Llama-2-7B).
+  * ``TrafficMeter`` — runtime byte accounting used by the serving engine:
+    every tensor that crosses the host<->device boundary is registered, so
+    the *measured* per-token traffic can be checked against the analytical
+    model (they must agree exactly — that is a test).
+
+The device side is stateless (hardwired linear maps); the host side owns all
+dynamic state (KV cache / SSM state), attention, normalization statistics,
+and sampling.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["Interface", "INTERFACES", "TrafficModel", "TrafficMeter"]
+
+ACT_BYTES = 2  # INT16 activations on the wire (§VI-C.1)
+DEVICE_COMPUTE_S = 64e-6      # 64 us linear-projection latency (§VI-C.2)
+HOST_ATTENTION_S = 5e-3       # 5 ms host attention (NPU-offload scenario)
+HOST_ATTENTION_CPU_S = 75e-3  # 50-100 ms realistic CPU scenario midpoint
+
+
+@dataclass(frozen=True)
+class Interface:
+    name: str
+    gbps: float                # marketing line rate
+    effective_bytes_per_s: float  # sustained payload bandwidth used by the paper
+    extra_cost_usd: float
+
+
+INTERFACES: Dict[str, Interface] = {
+    "pcie3x4": Interface("PCIe 3.0 x4", 32, 4e9, 15.0),
+    "tb4": Interface("Thunderbolt 4", 40, 5e9, 30.0),
+    "usb3": Interface("USB 3.0", 5, 300e6, 5.0),
+    "usb4": Interface("USB 4.0", 40, 2e9, 10.0),
+}
+
+
+@dataclass(frozen=True)
+class TrafficModel:
+    """Per-token host<->device traffic for a decoder layer stack.
+
+    Parameters describe the *backbone* that is split-brain partitioned.
+    ``recurrent_state_dim`` covers attention-free blocks (RWKV/SSM): the
+    recurrent update runs on the host, so the device ships the projected
+    r/k/v/g vectors instead of K/V — same accounting, different width.
+    """
+
+    num_layers: int
+    d_model: int
+    kv_dim: int              # kv_heads * head_dim (= d_model for MHA)
+    vocab_size: int
+    act_bytes: int = ACT_BYTES
+    cross_attn_layers: int = 0   # extra layers shipping cross-attn K/V (VLM/enc-dec)
+    cross_kv_dim: int = 0
+    recurrent_state_dim: int = 0  # extra per-layer host-bound projections (SSM/RWKV)
+
+    # ---- eq. 7-9 ----
+    def device_to_host_kv_bytes_per_layer(self) -> int:
+        return 2 * self.kv_dim * self.act_bytes  # K and V projections
+
+    def host_to_device_attn_bytes_per_layer(self) -> int:
+        return self.d_model * self.act_bytes     # attention output
+
+    def logits_bytes(self) -> int:
+        return self.vocab_size * self.act_bytes
+
+    # ---- eq. 10 ----
+    def bytes_per_token(self) -> int:
+        per_layer = (self.device_to_host_kv_bytes_per_layer()
+                     + self.host_to_device_attn_bytes_per_layer()
+                     + 2 * self.recurrent_state_dim * self.act_bytes)
+        cross = self.cross_attn_layers * 2 * self.cross_kv_dim * self.act_bytes
+        # cross-attn K/V are per-request (prefill), amortized ~0 per decode
+        # token; counted separately via prefill_bytes().
+        del cross
+        return per_layer * self.num_layers + self.logits_bytes()
+
+    def prefill_bytes(self, prompt_tokens: int, image_or_enc_tokens: int = 0) -> int:
+        per_tok_body = self.bytes_per_token() - self.logits_bytes()
+        cross = (self.cross_attn_layers * 2 * self.cross_kv_dim * self.act_bytes
+                 * image_or_enc_tokens)
+        return per_tok_body * prompt_tokens + self.logits_bytes() + cross
+
+    # ---- eq. 11 ----
+    def bandwidth_bytes_per_s(self, tokens_per_s: float = 20.0) -> float:
+        return self.bytes_per_token() * tokens_per_s
+
+    # ---- Table III ----
+    def interface_latency(self, iface: Interface, host_attention_s: float = HOST_ATTENTION_S) -> Dict[str, float]:
+        transfer_s = self.bytes_per_token() / iface.effective_bytes_per_s
+        total_s = transfer_s + DEVICE_COMPUTE_S + host_attention_s
+        return {
+            "interface": iface.name,
+            "transfer_ms": transfer_s * 1e3,
+            "total_ms": total_s * 1e3,
+            "tokens_per_s": 1.0 / total_s,
+            "extra_cost_usd": iface.extra_cost_usd,
+        }
+
+    def interface_table(self) -> List[Dict[str, float]]:
+        return [self.interface_latency(i) for i in INTERFACES.values()]
+
+    @staticmethod
+    def llama2_7b() -> "TrafficModel":
+        """The paper's reference config (32L, d=4096, MHA, 32K vocab)."""
+        return TrafficModel(num_layers=32, d_model=4096, kv_dim=4096, vocab_size=32000)
+
+
+class TrafficMeter:
+    """Runtime byte counter for tensors crossing the host/device boundary."""
+
+    def __init__(self) -> None:
+        self.device_to_host = 0
+        self.host_to_device = 0
+        self.log: List[Tuple[str, str, int]] = []
+
+    @staticmethod
+    def _nbytes(shape, act_bytes: int = ACT_BYTES) -> int:
+        return int(math.prod(shape)) * act_bytes
+
+    def d2h(self, name: str, shape, act_bytes: int = ACT_BYTES) -> None:
+        n = self._nbytes(shape, act_bytes)
+        self.device_to_host += n
+        self.log.append(("d2h", name, n))
+
+    def h2d(self, name: str, shape, act_bytes: int = ACT_BYTES) -> None:
+        n = self._nbytes(shape, act_bytes)
+        self.host_to_device += n
+        self.log.append(("h2d", name, n))
+
+    @property
+    def total(self) -> int:
+        return self.device_to_host + self.host_to_device
+
+    def reset(self) -> None:
+        self.device_to_host = 0
+        self.host_to_device = 0
+        self.log.clear()

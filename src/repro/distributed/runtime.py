@@ -1,0 +1,23 @@
+"""Ambient-mesh access for ops that want shard_map fast paths inside jit.
+
+The mesh entered via ``with mesh:`` (Mesh context manager) is visible at
+trace time; ops consult it to decide whether a distributed implementation
+(e.g. LSE-combined decode attention) is available.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+def ambient_mesh() -> Optional[Mesh]:
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None

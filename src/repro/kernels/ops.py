@@ -1,0 +1,87 @@
+"""Jit'd public wrappers around the Pallas kernels with oracle fallback.
+
+Every op takes ``use_pallas``; on CPU (this container) the Pallas kernels run
+in interpret mode for validation only, so the framework defaults to the
+pure-jnp references (which are lowering-safe, chunked implementations).
+On a real TPU runtime set ``repro.kernels.ops.USE_PALLAS = True`` (or the
+``kernels.use_pallas`` config flag) to dispatch the compiled kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import rwkv_scan as _rwkv
+from repro.kernels import w4a8_matmul as _w4a8
+
+USE_PALLAS = False  # module default; configs override per-call
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices()) if jax.devices() else False
+
+
+def _dispatch(use_pallas: Optional[bool]) -> bool:
+    return USE_PALLAS if use_pallas is None else use_pallas
+
+
+def w4a8_matmul(qx, x_scale, codes, w_scale, *, out_dtype=jnp.bfloat16,
+                use_pallas: Optional[bool] = None):
+    if _dispatch(use_pallas):
+        return _w4a8.w4a8_matmul(qx, x_scale, codes, w_scale,
+                                 out_dtype=out_dtype, interpret=not _ON_TPU)
+    return ref.w4a8_matmul(qx, x_scale, codes, w_scale, out_dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              kv_offset: int = 0, use_pallas: Optional[bool] = None):
+    if _dispatch(use_pallas):
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   kv_offset=kv_offset, interpret=not _ON_TPU)
+    return ref.mha_chunked(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, kv_offset=kv_offset)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None,
+                     use_pallas: Optional[bool] = None,
+                     dist_axis: Optional[str] = None,
+                     batch_axes: tuple = ()):
+    del use_pallas  # decode uses the reference path (tiny q; bandwidth-bound)
+    if dist_axis is not None and window is None:
+        # §Perf H2: LSE-combined flash decode over the seq-sharded cache.
+        from repro.distributed import collectives, runtime
+        mesh = runtime.ambient_mesh()
+        if mesh is not None and dist_axis in mesh.axis_names:
+            S = k_cache.shape[2]
+            valid = jnp.arange(S)[None, :] < cache_len[:, None]
+            fn = collectives.distributed_decode_attention(
+                mesh, dist_axis, softcap=softcap, scale=scale,
+                batch_axes=batch_axes)
+            return fn(q, k_cache, v_cache, valid)
+    return ref.decode_attention(q, k_cache, v_cache, cache_len,
+                                window=window, softcap=softcap, scale=scale)
+
+
+def rwkv6_chunked(r, k, v, w, u, state=None, *, chunk: int = 64):
+    return ref.rwkv6_scan_chunked(r, k, v, w, u, state, chunk=chunk)
+
+
+def rwkv6(r, k, v, w, u, state=None, *, use_pallas: Optional[bool] = None):
+    if _dispatch(use_pallas) and state is None:
+        return _rwkv.rwkv6_scan(r, k, v, w, u, interpret=not _ON_TPU)
+    return ref.rwkv6_scan(r, k, v, w, u, state)
+
+
+def selective_scan(x, delta, A, B, C, state=None, *,
+                   use_pallas: Optional[bool] = None,
+                   algorithm: str = "sequential"):
+    del use_pallas
+    if algorithm == "associative" and x.shape[1] > 1:
+        return ref.selective_scan_assoc(x, delta, A, B, C, state)
+    return ref.selective_scan(x, delta, A, B, C, state)

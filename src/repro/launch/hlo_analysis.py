@@ -1,0 +1,424 @@
+"""Roofline-term extraction from the compiled, SPMD-partitioned HLO.
+
+``compiled.cost_analysis()`` counts every while-loop (scan) body ONCE, which
+undercounts a scanned-layers transformer by ~num_layers x.  This module does
+its own static analysis of ``compiled.as_text()`` instead:
+
+  * the HLO is split into computations; a call graph is built from
+    ``calls=`` (fusions), ``body=``/``condition=`` (while; weighted by the
+    ``known_trip_count`` XLA records in backend_config), and
+    ``branch_computations=`` (conditionals; weighted 1/num_branches —
+    expected-value accounting for the causal block-skip ``lax.cond``),
+  * FLOPs: every ``dot`` = 2 x output elems x contracted dims (operand
+    shapes resolved through the computation's symbol table),
+  * HBM traffic follows XLA's fusion-aware convention:
+      - dot: operands + result,
+      - data movers (convert/copy/slice/transpose/concat/pad): 2 x result,
+      - dynamic-slice/gather: 2 x result (NOT the full operand — a scan
+        slicing per-layer weights from the stacked array reads one layer),
+      - dynamic-update-slice: 2 x update (in-place aliasing),
+      - reduce/reduce-window: operands + result,
+      - broadcast/iota: free (always fused into consumers on TPU),
+      - fusion ops: result + operand bytes, where an operand consumed inside
+        the fused computation solely through dynamic-slice counts as the
+        slice size, and a fused root dynamic-update-slice counts as the
+        update size (this is the scan-body weight-slice / carry-write
+        pattern; counting full buffers would overcount by num_layers x),
+  * collectives: per-chip wire bytes with ring factors (all-reduce 2x,
+    all-gather 1x result, reduce-scatter ~operand, all-to-all /
+    collective-permute 1x), group size from replica_groups.
+
+Shapes in the partitioned module are per-device: memory/collective sums are
+per-chip; FLOPs are multiplied by ``chips`` by the caller for the global
+compute term (every chip executes the same SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+_MOVER_OPS = {"convert", "copy", "slice", "transpose", "concatenate", "pad",
+              "reverse", "sort"}
+_COLL_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[float, float]:
+    elems = 0.0
+    nbytes = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _operand_names(line: str, op: str) -> List[str]:
+    tail = line.split(op + "(", 1)
+    if len(tail) != 2:
+        return []
+    buf = ""
+    depth = 1
+    for ch in tail[1]:
+        if ch == "(":
+            depth += 1
+        if ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf += ch
+    return _OPERANDS_RE.findall(buf)
+
+
+@dataclass
+class CompInfo:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    mem_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+    edges: List[Tuple[str, float]] = field(default_factory=list)
+    # for fused computations: per-parameter effective read bytes
+    # (None = full operand), and effective output bytes (None = full result)
+    param_read_bytes: Dict[int, float] = field(default_factory=dict)
+    out_write_bytes: Optional[float] = None
+    fusion_ops: List[Tuple[str, str, List[str]]] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+    ops_seen: List[str] = field(default_factory=list)
+
+    @property
+    def is_pure_convert(self) -> bool:
+        """A fused computation containing only parameter/convert/bitcast/copy
+        ops — XLA:CPU inserts these to legalize bf16 (no native bf16 ALUs).
+        They do not exist in the TPU lowering, so their boundary traffic is
+        accounted separately (``fp_convert_bytes``), not in the memory term.
+        """
+        body = [o for o in self.ops_seen if o not in ("parameter", "constant")]
+        return (len(body) > 0 and
+                all(o in ("convert", "bitcast", "copy", "reshape", "tuple",
+                          "get-tuple-element") for o in body))
+
+
+def _split_computations(text: str) -> Dict[str, Tuple[List[str], bool]]:
+    comps: Dict[str, Tuple[List[str], bool]] = {}
+    cur: Optional[str] = None
+    lines: List[str] = []
+    entry = False
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                entry = bool(m.group(1))
+                lines = []
+        else:
+            if line.startswith("}"):
+                comps[cur] = (lines, entry)
+                cur = None
+            else:
+                lines.append(line)
+    return comps
+
+
+def _analyze_computation(lines: List[str]) -> CompInfo:
+    ci = CompInfo(coll={k: 0.0 for k in _COLL_OPS},
+                  coll_counts={k: 0.0 for k in _COLL_OPS})
+    symbols = ci.symbols
+    params: Dict[str, int] = {}        # %name -> parameter index
+    consumers: Dict[str, List[Tuple[str, str]]] = {}  # name -> [(op, defline)]
+    root_line: Optional[Tuple[str, str, str]] = None
+
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        symbols[name] = type_str
+        ci.ops_seen.append(op)
+        if "ROOT" in line.split("=")[0]:
+            root_line = (name, op, line)
+        pm = _PARAM_IDX_RE.search(line) if op == "parameter" else None
+        if pm:
+            params[name] = int(pm.group(1))
+        for a in _operand_names(line, op):
+            consumers.setdefault(a, []).append((op, line))
+
+        if op == "dot":
+            out_elems, out_bytes = _shape_elems_bytes(type_str)
+            args = _operand_names(line, op)
+            lhs_shape = symbols.get(args[0], "") if args else ""
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            contract = 1
+            if lhs_shape and mc:
+                dims_m = _SHAPE_RE.search(lhs_shape)
+                if dims_m:
+                    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                    for cidx in mc.group(1).split(","):
+                        if cidx and int(cidx) < len(dims):
+                            contract *= dims[int(cidx)]
+            ci.flops += 2.0 * out_elems * contract
+            b = out_bytes + sum(
+                _shape_elems_bytes(symbols.get(a, ""))[1] for a in args)
+            ci.mem_bytes += b
+            ci.mem_by_kind["dot"] = ci.mem_by_kind.get("dot", 0.0) + b
+        elif op in _COLL_OPS:
+            _, out_bytes = _shape_elems_bytes(type_str)
+            g = 2
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = max(2, int(gm.group(2)))
+            factor = {"all-reduce": 2.0, "all-gather": 1.0,
+                      "reduce-scatter": float(g - 1), "all-to-all": 1.0,
+                      "collective-permute": 1.0}[op]
+            ci.coll[op] += out_bytes * factor
+            ci.coll_counts[op] += 1
+        elif op in _MOVER_OPS:
+            _, out_bytes = _shape_elems_bytes(type_str)
+            if op == "convert":
+                args = _operand_names(line, op)
+                src = ci.symbols.get(args[0], "") if args else ""
+                fp = {"f32", "bf16", "f16"}
+                sm = _SHAPE_RE.search(src)
+                rm = _SHAPE_RE.search(type_str)
+                if (sm and rm and sm.group(1) in fp and rm.group(1) in fp
+                        and sm.group(2) == rm.group(2)):
+                    # bf16<->f32 legalization copy (absent on TPU)
+                    ci.mem_by_kind["fp_convert(cpu-legalization)"] =                         ci.mem_by_kind.get("fp_convert(cpu-legalization)", 0.0)                         + 2.0 * out_bytes
+                    continue
+            ci.mem_bytes += 2.0 * out_bytes
+            ci.mem_by_kind[op] = ci.mem_by_kind.get(op, 0.0) + 2.0 * out_bytes
+        elif op in ("dynamic-slice", "gather"):
+            _, out_bytes = _shape_elems_bytes(type_str)
+            ci.mem_bytes += 2.0 * out_bytes
+            ci.mem_by_kind[op] = ci.mem_by_kind.get(op, 0.0) + 2.0 * out_bytes
+        elif op == "dynamic-update-slice":
+            args = _operand_names(line, op)
+            upd = symbols.get(args[1], "") if len(args) > 1 else type_str
+            _, upd_bytes = _shape_elems_bytes(upd)
+            ci.mem_bytes += 2.0 * upd_bytes
+            ci.mem_by_kind[op] = ci.mem_by_kind.get(op, 0.0) + 2.0 * upd_bytes
+        elif op == "scatter":
+            args = _operand_names(line, op)
+            upd = symbols.get(args[-1], "") if args else type_str
+            _, upd_bytes = _shape_elems_bytes(upd)
+            ci.mem_bytes += 2.0 * upd_bytes
+            ci.mem_by_kind[op] = ci.mem_by_kind.get(op, 0.0) + 2.0 * upd_bytes
+        elif op in ("reduce", "reduce-window"):
+            _, out_bytes = _shape_elems_bytes(type_str)
+            b = out_bytes + sum(
+                _shape_elems_bytes(symbols.get(a, ""))[1]
+                for a in _operand_names(line, op))
+            ci.mem_bytes += b
+            ci.mem_by_kind[op] = ci.mem_by_kind.get(op, 0.0) + b
+
+        # call-graph edges
+        if op in ("fusion", "call", "custom-call"):
+            cm = _CALLS_RE.search(line)
+            if cm:
+                if op == "fusion":
+                    ci.fusion_ops.append((cm.group(1), type_str,
+                                          _operand_names(line, op)))
+                else:
+                    ci.edges.append((cm.group(1), 1.0))
+        elif op == "while":
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = float(tm.group(1))
+            bm = _BODY_RE.search(line)
+            cm = _COND_RE.search(line)
+            if bm:
+                ci.edges.append((bm.group(1), trip))
+            if cm:
+                ci.edges.append((cm.group(1), trip))
+        elif op == "conditional":
+            brm = _BRANCH_RE.search(line)
+            if brm:
+                branches = _OPERANDS_RE.findall(brm.group(1))
+                for b in branches:
+                    ci.edges.append((b, 1.0 / max(1, len(branches))))
+
+    # ---- fused-computation read/write summaries ----
+    for pname, pidx in params.items():
+        cons = consumers.get(pname, [])
+        if cons and all(c[0] in ("dynamic-slice", "gather", "bitcast", "slice")
+                        for c in cons):
+            total = 0.0
+            for cop, cline in cons:
+                if cop == "bitcast":
+                    continue
+                dm = _DEF_RE.match(cline)
+                total += _shape_elems_bytes(dm.group(2))[1] if dm else 0.0
+            ci.param_read_bytes[pidx] = total
+    if root_line and root_line[1] == "dynamic-update-slice":
+        args = _operand_names(root_line[2], "dynamic-update-slice")
+        if len(args) > 1:
+            ci.out_write_bytes = _shape_elems_bytes(symbols.get(args[1], ""))[1]
+    return ci
+
+
+@dataclass
+class HloTotals:
+    flops_per_chip: float
+    mem_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: Dict[str, float]
+    coll_counts: Dict[str, float]
+    mem_by_kind: Dict[str, float] = field(default_factory=dict)
+
+
+def analyze(hlo_text: str) -> HloTotals:
+    comps = _split_computations(hlo_text)
+    infos = {name: _analyze_computation(lines)
+             for name, (lines, _) in comps.items()}
+    entry = next((n for n, (_, e) in comps.items() if e), None)
+
+    # resolve fusion-op bytes now that every callee is summarized
+    for ci in infos.values():
+        for callee, out_type, operands in ci.fusion_ops:
+            callee_ci = infos.get(callee)
+            _, out_bytes = _shape_elems_bytes(out_type)
+            total = (callee_ci.out_write_bytes
+                     if callee_ci and callee_ci.out_write_bytes is not None
+                     else out_bytes)
+            for idx, opname in enumerate(operands):
+                full = _shape_elems_bytes(ci.symbols.get(opname, ""))[1]
+                if callee_ci and idx in callee_ci.param_read_bytes:
+                    total += min(full, callee_ci.param_read_bytes[idx])
+                else:
+                    total += full
+            if callee_ci is not None and callee_ci.is_pure_convert:
+                ci.mem_by_kind["fp_convert(cpu-legalization)"] =                     ci.mem_by_kind.get("fp_convert(cpu-legalization)", 0.0) + total
+                continue
+            ci.mem_bytes += total
+            ci.mem_by_kind["fusion"] = ci.mem_by_kind.get("fusion", 0.0) + total
+
+    memo = {}
+
+    def total(name: str):
+        if name in memo:
+            return memo[name]
+        ci = infos.get(name)
+        if ci is None:
+            return (0.0, 0.0, {}, {}, {})
+        f, b = ci.flops, ci.mem_bytes
+        c = dict(ci.coll)
+        cc = dict(ci.coll_counts)
+        mk = dict(ci.mem_by_kind)
+        memo[name] = (f, b, c, cc, mk)  # cycle guard
+        for callee, mult in ci.edges:
+            cf, cb, ccoll, ccnt, cmk = total(callee)
+            f += mult * cf
+            b += mult * cb
+            for k, v in ccoll.items():
+                c[k] = c.get(k, 0.0) + mult * v
+            for k, v in ccnt.items():
+                cc[k] = cc.get(k, 0.0) + mult * v
+            for k, v in cmk.items():
+                mk[k] = mk.get(k, 0.0) + mult * v
+        memo[name] = (f, b, c, cc, mk)
+        return memo[name]
+
+    f, b, c, cc, mk = total(entry) if entry else (0.0, 0.0, {}, {}, {})
+    return HloTotals(
+        flops_per_chip=f, mem_bytes_per_chip=b,
+        coll_bytes_per_chip=sum(c.values()), coll_by_kind=c, coll_counts=cc,
+        mem_by_kind=mk)
+
+
+# --- hardware constants (TPU v5e target, per assignment) ---------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-chip effective, conservative)
+
+
+@dataclass
+class Roofline:
+    hlo_flops: float              # whole-program FLOPs (global = per-chip x chips)
+    hlo_bytes: float              # whole-program HBM bytes (global)
+    coll_bytes_per_chip: float    # per-chip wire bytes
+    chips: int
+    model_flops: float            # 6*N*D (train) / 2*N_active*D (inference)
+    model_bytes: float = 0.0      # minimum necessary HBM traffic (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def t_ideal(self) -> float:
+        """Hardware floor for this workload: the slower of (useful FLOPs at
+        peak) and (minimum-necessary bytes at full HBM bandwidth).  Decode is
+        legitimately memory-bound — its roofline target is the bandwidth
+        floor, not peak FLOPs."""
+        t_c = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_m = self.model_bytes / (self.chips * HBM_BW)
+        return max(t_c, t_m)
+
+    @property
+    def roofline_frac(self) -> float:
+        """t_ideal / t_bound — how close the compiled program's dominant
+        roofline term is to the workload's hardware floor."""
+        return self.t_ideal / self.t_bound if self.t_bound else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "model_bytes": self.model_bytes,
+            "t_ideal_s": self.t_ideal,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }

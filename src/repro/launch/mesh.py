@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must see 1 device; only dryrun.py sets
+the 512-placeholder-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds the cross-pod 'pod' axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None):
+    """Tiny mesh over whatever devices exist (CPU tests)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    return jax.make_mesh((1, n), ("data", "model"), devices=devices)

@@ -1,0 +1,62 @@
+"""Recompute roofline JSONs from saved .hlo.gz artifacts (no recompilation).
+
+Keeps every published number on ONE analyzer version: after an analyzer
+refinement, re-run this over experiments/hlo/ to refresh experiments/dryrun/.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+import re
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_analysis as hlo
+from repro.launch.dryrun import model_bytes, model_flops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="experiments/hlo")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    for path in sorted(glob.glob(os.path.join(args.hlo_dir, "*.hlo.gz"))):
+        name = os.path.basename(path)[:-7]
+        m = re.match(r"(.+)__(\w+)__pod(\d)(?:__(\w+))?$", name)
+        arch, shape_name, pods, variant = m.group(1), m.group(2), int(m.group(3)), m.group(4) or "baseline"
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        chips = 256 * pods
+        with gzip.open(path, "rt") as f:
+            totals = hlo.analyze(f.read())
+        roof = hlo.Roofline(
+            hlo_flops=totals.flops_per_chip * chips,
+            hlo_bytes=totals.mem_bytes_per_chip * chips,
+            coll_bytes_per_chip=totals.coll_bytes_per_chip,
+            chips=chips, model_flops=model_flops(cfg, shape),
+            model_bytes=model_bytes(cfg, shape))
+        out_path = os.path.join(args.out, name + ".json")
+        base = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                base = json.load(f)
+        base.update({
+            "arch": arch, "shape": shape_name, "chips": chips,
+            "mesh": "2x16x16" if pods == 2 else "16x16",
+            "variant": variant, "status": "ok",
+            "collectives": {"by_kind": totals.coll_by_kind,
+                            "op_counts_weighted": totals.coll_counts,
+                            "total_per_chip": totals.coll_bytes_per_chip},
+            "mem_by_kind_per_chip": totals.mem_by_kind,
+            "roofline": roof.as_dict(),
+        })
+        with open(out_path, "w") as f:
+            json.dump(base, f, indent=2, default=str)
+        r = roof.as_dict()
+        print(f"{name}: bn={r['bottleneck']} frac={r['roofline_frac']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

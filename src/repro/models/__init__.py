@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo (dense/MoE/softcap/sliding/cross-attn LMs, RWKV6,
+Hymba hybrid, enc-dec)."""
+from repro.models import api  # noqa: F401

@@ -1,0 +1,120 @@
+"""Unified model API: family dispatch, loss, LAQ model quantization,
+and ShapeDtypeStruct input specs for the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import quant
+from repro.models import encdec, hymba, rwkv6, transformer
+
+_FAMILIES = {
+    "lm": transformer,
+    "rwkv": rwkv6,
+    "hymba": hymba,
+    "encdec": encdec,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    return family_module(cfg).init_params(cfg, key)
+
+
+def forward(params, tokens, cfg: ModelConfig, frontend=None):
+    return family_module(cfg).forward(params, tokens, cfg, frontend=frontend)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, frontend=None, params=None):
+    return family_module(cfg).init_cache(cfg, batch, max_len,
+                                         frontend=frontend, params=params)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    return family_module(cfg).decode_step(params, cache, tokens, cfg)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          frontend=batch.get("frontend"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+# ----------------------------------------------------------------------------
+# LAQ quantization of a whole model (the ITA "synthesis" step)
+# ----------------------------------------------------------------------------
+_QUANT_KEYS = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "lm_head",
+               "wr", "wg", "cm_k", "cm_v", "w_in", "w_out"}
+
+
+def quantize_model(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    """Replace every device-side (static linear) weight with LAQ INT4 codes.
+
+    Norm scales, embeddings, router logits weights, recurrent decay params —
+    the host-side / dynamic pieces — stay in float.  Stacked (layer-leading)
+    weights are quantized per layer via vmap, keeping per-(layer, channel)
+    scales.
+    """
+    ita = cfg.ita
+
+    def q2d(w):
+        return quant.quantize_weights(
+            w, prune_threshold=ita.prune_threshold, laq_slack=ita.laq_slack,
+            logic_aware=ita.logic_aware)
+
+    def quantize_entry(path_key: str, w):
+        if path_key not in _QUANT_KEYS or not hasattr(w, "ndim") or w.ndim < 2:
+            return w
+        if w.ndim == 2:
+            return q2d(w)
+        lead = w.shape[:-2]
+        flat = w.reshape((-1,) + w.shape[-2:])
+        ql = jax.vmap(q2d)(flat)
+        return quant.QuantizedLinear(
+            codes=ql.codes.reshape(lead + w.shape[-2:]),
+            scales=ql.scales.reshape(lead + (w.shape[-1],)))
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (quantize_entry(k, v) if not isinstance(v, (dict, list))
+                        else walk(v)) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(params)
+
+
+# ----------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct; zero allocation)
+# ----------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one step of the given shape, as ShapeDtypeStructs."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+    else:  # decode: one new token against a T-long cache
+        specs["tokens"] = jax.ShapeDtypeStruct((B,), i32)
+    if cfg.frontend_tokens:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), dt)
+    return specs

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch,
+grouped matmul (shardable over the expert dim = EP on the "model" axis).
+
+Memory is O(tokens * k) — no (T, E, C) one-hot dispatch tensors — so the
+32k-seq dry-run cells lower without materializing terabytes.  Dropped-token
+handling follows the standard capacity-factor scheme; the combine step
+scatter-adds weighted expert outputs back per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init, linear
+
+
+def moe_init(key, d_model: int, d_ff: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    E = cfg.num_experts
+    s1 = 1.0 / math.sqrt(d_model)
+    s2 = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": dense_init(ks[0], d_model, E, dtype),
+        "w1": jax.random.uniform(ks[1], (E, d_model, d_ff), dtype, -s1, s1),
+        "w3": jax.random.uniform(ks[2], (E, d_model, d_ff), dtype, -s1, s1),
+        "w2": jax.random.uniform(ks[3], (E, d_ff, d_model), dtype, -s2, s2),
+    }
+
+
+def _expert_matmul(eb: jnp.ndarray, w) -> jnp.ndarray:
+    """(E,C,d) x (E,d,f) grouped matmul; w may be LAQ-quantized (W4A8 —
+    the ITA device datapath applied per expert)."""
+    from repro.core import quant
+
+    if isinstance(w, quant.QuantizedLinear):
+        E, C, d = eb.shape
+        qx, xs = quant.quantize_activations_int8(eb.reshape(E * C, d))
+        acc = jax.lax.dot_general(
+            qx.reshape(E, C, d), w.codes,
+            (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+        out = acc.astype(jnp.float32) * xs.reshape(E, C, 1) * w.scales[:, None, :]
+        return out.astype(eb.dtype)
+    return jnp.einsum("ecd,edf->ecf", eb, w.astype(eb.dtype))
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d) -> (out (B, T, d), aux_loss scalar).
+
+    Router/gating (dynamic, data-dependent) is a *host* op under split-brain;
+    the expert matmuls are static linear maps — the device side.  The aux
+    loss is the standard load-balancing loss (Shazeer et al.).
+    """
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    n = xt.shape[0]
+    C = max(1, int(math.ceil(n * k / E * cfg.capacity_factor)))
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (n, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate, ids = jax.lax.top_k(probs, k)                       # (n, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (n * k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ---
+    flat_ids = ids.reshape(-1)                                # (S=n*k,)
+    S = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids)                             # stable
+    sorted_ids = flat_ids[order]
+    tok = order // k                                          # source token per slot
+    counts = jnp.zeros((E,), jnp.int32).at[flat_ids].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(S, dtype=jnp.int32) - offsets[sorted_ids]
+    keep = rank < C
+    dest = jnp.where(keep, sorted_ids * C + rank, E * C)      # overflow slot
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xt[tok])
+    eb = buf[:-1].reshape(E, C, d)
+
+    h = _expert_matmul(eb, p["w1"])
+    g = _expert_matmul(eb, p["w3"])
+    y = _expert_matmul(jax.nn.silu(h) * g, p["w2"])
+
+    y_slots = y.reshape(E * C, d)
+    gathered = jnp.where(keep[:, None], y_slots[jnp.minimum(dest, E * C - 1)], 0.0)
+    w_sorted = gate.reshape(-1)[order]
+    out = jnp.zeros((n, d), x.dtype).at[tok].add(
+        (gathered.astype(jnp.float32) * w_sorted[:, None]).astype(x.dtype))
+    return out.reshape(B, T, d), aux

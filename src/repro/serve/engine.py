@@ -1,0 +1,62 @@
+"""Production serving engine: batched prefill + decode for every arch family.
+
+Wraps the jitted ``prefill``/``serve_step`` callables (the same ones the
+multi-pod dry-run compiles) behind a request-batch API.  On real hardware the
+mesh is the production mesh; on CPU it serves reduced configs for tests and
+examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_test_mesh
+from repro.models import api
+from repro.train import step as step_mod
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh if mesh is not None else make_test_mesh()
+        self.max_len = max_len
+        self._serve_step = None
+
+    def _get_serve_step(self, cache):
+        if self._serve_step is None:
+            self._serve_step = step_mod.make_serve_step(
+                self.cfg, self.mesh, self.params, cache, donate=False)
+        return self._serve_step
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 frontend: Optional[jnp.ndarray] = None) -> Dict[str, Any]:
+        """Greedy-decode a batch. prompts: (B, T0) int32 (right-aligned)."""
+        cfg = self.cfg
+        B, T0 = prompts.shape
+        with self.mesh:
+            cache = api.init_cache(cfg, B, self.max_len, frontend=frontend,
+                                   params=self.params)
+            step = self._get_serve_step(cache)
+            tok = jnp.asarray(prompts[:, 0], jnp.int32)
+            # prefill via repeated decode (KV append); the one-shot
+            # api.forward prefill path is exercised by the dry-run cells
+            for t in range(1, T0):
+                _, _, cache = step(self.params, cache, tok)
+                tok = jnp.asarray(prompts[:, t], jnp.int32)
+            out = []
+            t0 = time.perf_counter()
+            for _ in range(max_new):
+                tok, logits, cache = step(self.params, cache, tok)
+                out.append(np.asarray(tok))
+            dt = time.perf_counter() - t0
+        tokens = np.stack(out, axis=1)
+        return {"tokens": tokens,
+                "tokens_per_s": B * max_new / dt,
+                "decode_s": dt}

@@ -1,0 +1,165 @@
+"""Split-Brain serving engine — the paper's §IV-B protocol, executable.
+
+Decoding is explicitly partitioned into:
+
+  device_phase  — the ITA ASIC: stateless, LAQ-quantized linear projections
+                  (QKV, FFN, LM head).  Zero dynamic state.
+  host_phase    — the host CPU: KV-cache append, attention (the dynamic-
+                  state op), residual adds, norm statistics, sampling.
+
+Every tensor that crosses the boundary is registered on a TrafficMeter, so
+the *measured* per-token interface bytes can be asserted equal to the
+analytical TrafficModel (eq. 7-11) — that equality is a test
+(tests/test_splitbrain.py) and a benchmark (table3_interface).
+
+This engine covers the paper's own configs (decoder-only LM family); the
+production serving path for all 10 archs is serve/engine.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.splitbrain import ACT_BYTES, TrafficMeter, TrafficModel
+from repro.kernels import ops
+from repro.models import api
+from repro.models import layers as L
+from repro.models import transformer
+
+
+def traffic_model_for(cfg: ModelConfig) -> TrafficModel:
+    return TrafficModel(
+        num_layers=cfg.num_layers,
+        d_model=cfg.d_model,
+        kv_dim=cfg.kv_dim,
+        vocab_size=cfg.vocab_size,
+    )
+
+
+class SplitBrainEngine:
+    """Greedy decoding with an explicit host/device boundary."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 quantize: bool = True):
+        assert cfg.family == "lm" and len(cfg.layer_pattern) == 1, \
+            "split-brain reference engine covers the paper's LM configs"
+        self.cfg = cfg
+        self.meter = TrafficMeter()
+        # The "synthesis" step: weights become immutable INT4 codes.
+        self.device_params = (api.quantize_model(params, cfg)
+                              if quantize else params)
+        self.host_params = params  # norms/embedding stay host-side floats
+        self.max_len = max_len
+        self._hd = cfg.resolved_head_dim
+
+    # ------------------------------------------------------------- device ops
+    def _device_qkv(self, layer_p, x):
+        """ITA device: hardwired QKV projection (stateless)."""
+        cfg = self.cfg
+        self.meter.h2d("x_qkv_in", x.shape)
+        q, k, v = L.qkv_project(layer_p["attn"], x, cfg.num_heads,
+                                cfg.num_kv_heads, self._hd)
+        # K, V stream back to the host KV cache (eq. 7); Q accompanies them
+        # in the same DMA (the paper counts K/V only — Q stays on-device in
+        # the ASIC pipeline; we ship it because our "device" is a function).
+        self.meter.d2h("kv_out", (2, *k.shape[:2], k.shape[2], k.shape[3]))
+        return q, k, v
+
+    def _device_attn_out(self, layer_p, attn):
+        self.meter.h2d("attn_in", attn.shape)   # eq. 8
+        return L.linear(attn, layer_p["attn"]["wo"])
+
+    def _device_ffn(self, layer_p, y):
+        out = L.swiglu(y, layer_p["mlp"]["w1"], layer_p["mlp"]["w3"],
+                       layer_p["mlp"]["w2"])
+        return out
+
+    def _device_logits(self, x):
+        head = self.device_params.get("lm_head")
+        logits = L.linear(x, head)
+        self.meter.d2h("logits", logits.shape)   # eq. 9
+        return logits
+
+    # --------------------------------------------------------------- decoding
+    def decode_token(self, cache: Dict[str, Any], token: jnp.ndarray):
+        """One token through the split-brain loop. token: (B,)."""
+        cfg = self.cfg
+        B = token.shape[0]
+        hd = self._hd
+        # HOST: embedding lookup (vocabulary table, random access)
+        x = self.host_params["embed"][token][:, None, :].astype(jnp.dtype(cfg.dtype))
+        pos = cache["len"]
+        positions = pos[:, None]
+
+        n_groups, group_size = transformer.group_layout(cfg)
+        dev_blocks = self.device_params["blocks"]
+        host_blocks = self.host_params["blocks"]
+        for g in range(n_groups):
+            for j in range(group_size):
+                idx = (g, j)
+                dev_p = jax.tree.map(lambda a: a[idx[0]][idx[1]], dev_blocks)
+                host_p = jax.tree.map(lambda a: a[idx[0]][idx[1]], host_blocks)
+                layer = g * group_size + j
+                # HOST: pre-norm (dynamic statistics)
+                xn = L.rmsnorm(x, host_p["ln_attn"], cfg.norm_eps)
+                # DEVICE: QKV projection
+                q, k, v = self._device_qkv(dev_p, xn)
+                q = L.rope(q, positions, cfg.rope_theta)
+                k = L.rope(k, positions, cfg.rope_theta)
+                # HOST: KV-cache append + attention
+                kc, vc = cache["k"][layer], cache["v"][layer]
+                kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+                    c, kk, (0, i, 0)))(kc, k[:, :, 0:1], pos)
+                vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+                    c, vv, (0, i, 0)))(vc, v[:, :, 0:1], pos)
+                cache["k"][layer], cache["v"][layer] = kc, vc
+                attn = ops.decode_attention(q, kc, vc, pos + 1,
+                                            softcap=cfg.softcap)
+                attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
+                # DEVICE: output projection;  HOST: residual add
+                x = x + self._device_attn_out(dev_p, attn)
+                # HOST norm -> DEVICE FFN -> HOST residual
+                y = L.rmsnorm(x, host_p["ln_mlp"], cfg.norm_eps)
+                x = x + self._device_ffn(dev_p, y)
+
+        x = L.rmsnorm(x, self.host_params["ln_final"], cfg.norm_eps)
+        logits = self._device_logits(x)[:, 0]
+        # HOST: sampling
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cache["len"] = cache["len"] + 1
+        return next_tok, logits, cache
+
+    def init_cache(self, batch: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        hd = self._hd
+        return {
+            "k": [jnp.zeros((batch, cfg.num_kv_heads, self.max_len, hd),
+                            jnp.dtype(cfg.dtype)) for _ in range(cfg.num_layers)],
+            "v": [jnp.zeros((batch, cfg.num_kv_heads, self.max_len, hd),
+                            jnp.dtype(cfg.dtype)) for _ in range(cfg.num_layers)],
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def measured_bytes_per_token(self, batch: int = 1,
+                                 count_q: bool = False) -> Dict[str, int]:
+        """Per-token boundary bytes from the meter (per sequence).
+
+        The paper's eq. 10 counts K/V out, attention in, logits out; our
+        meter additionally logs the QKV input activation (h2d "x_qkv_in").
+        ``count_q=False`` reproduces the paper's accounting exactly.
+        """
+        d2h = h2d = 0
+        for direction, name, nbytes in self.meter.log:
+            if not count_q and name == "x_qkv_in":
+                continue
+            if direction == "d2h":
+                d2h += nbytes
+            else:
+                h2d += nbytes
+        return {"d2h": d2h // batch, "h2d": h2d // batch,
+                "total": (d2h + h2d) // batch}

@@ -1,0 +1,129 @@
+"""Optimizers in pure JAX: AdamW with optional INT8-quantized moments.
+
+The 8-bit moment storage is a distributed-optimization feature in the spirit
+of the paper's quantization philosophy: the (m, v) state of a 235B-param MoE
+drops from 8 bytes/param to ~2 bytes/param, which is what lets the qwen3
+train_4k cell fit the 16 GB/chip HBM budget at 256 chips (EXPERIMENTS.md).
+
+State layout is a pytree mirroring params, so the sharding rules engine
+shards it exactly like the weights (fully sharded, ZeRO style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    quantize_moments: bool = False   # int8 blockwise moment storage
+    moment_block: int = 256
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+# --- int8 blockwise moment codec -------------------------------------------
+def _q8(x: jnp.ndarray, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape, size: int):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+class _QMoment(NamedTuple):
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def init_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    def zeros_like_moment(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.quantize_moments:
+            q, s = _q8(z, cfg.moment_block)
+            return _QMoment(q, s)
+        return z
+
+    float_params = jax.tree.map(lambda p: p, params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_moment, float_params),
+        "v": jax.tree.map(zeros_like_moment, float_params),
+    }
+
+
+def _global_norm(grads) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m_f = _dq8(m.q, m.scale, p.shape, p.size)
+            v_f = _dq8(v.q, v.scale, p.shape, p.size)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mh = m_f / bc1
+        vh = v_f / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * (p.ndim >= 2)  # no decay on norms/biases
+        new_p = (p.astype(jnp.float32) * (1 - lr * decay) - lr * delta).astype(p.dtype)
+        if cfg.quantize_moments:
+            m_out = _QMoment(*_q8(m_f, cfg.moment_block))
+            v_out = _QMoment(*_q8(v_f, cfg.moment_block))
+        else:
+            m_out, v_out = m_f, v_f
+        return new_p, m_out, v_out
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"step": step + 1, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

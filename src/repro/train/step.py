@@ -1,0 +1,85 @@
+"""Jitted, mesh-sharded train and serve steps.
+
+``make_train_step``/``make_serve_step`` bind a ModelConfig + mesh into a
+``jax.jit`` with explicit in/out shardings from the rules engine — these are
+the exact callables the multi-pod dry-run lowers and compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import api
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, optcfg: opt.AdamWConfig, mesh: Mesh,
+                    params_like, opt_like, donate: bool = True):
+    p_specs = shd.param_pspecs(params_like, cfg, mesh)
+    o_specs = {
+        "step": P(),
+        "m": shd.param_pspecs(opt_like["m"], cfg, mesh),
+        "v": shd.param_pspecs(opt_like["v"], cfg, mesh),
+    }
+    b_specs = shd.batch_pspecs(cfg, mesh, "train")
+
+    def train_step(params, opt_state, batch):
+        (tot, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt_state, om = opt.apply_updates(params, grads, opt_state, optcfg)
+        metrics = dict(metrics, **om, total=tot)
+        return params, opt_state, metrics
+
+    in_sh = (shd.with_sharding(mesh, p_specs), shd.with_sharding(mesh, o_specs),
+             {k: NamedSharding(mesh, v) for k, v in b_specs.items()})
+    out_sh = (shd.with_sharding(mesh, p_specs), shd.with_sharding(mesh, o_specs),
+              None)
+    return jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1) if donate else ())
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    b_specs = shd.batch_pspecs(cfg, mesh, "prefill")
+
+    def prefill_step(params, batch):
+        logits, _ = api.forward(params, batch["tokens"], cfg,
+                                frontend=batch.get("frontend"))
+        return logits
+
+    def wrap(params_like):
+        p_specs = shd.param_pspecs(params_like, cfg, mesh)
+        return jax.jit(
+            prefill_step,
+            in_shardings=(shd.with_sharding(mesh, p_specs),
+                          {k: NamedSharding(mesh, v) for k, v in b_specs.items()}),
+            out_shardings=NamedSharding(mesh, shd.logits_pspec(cfg, mesh, "prefill")))
+    return wrap
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
+                    donate: bool = True):
+    """One decode step (the paper's per-token loop) with sharded KV cache."""
+    p_specs = shd.param_pspecs(params_like, cfg, mesh)
+    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    b = shd.MeshAxes(mesh, cfg).resolve("batch")
+
+    def serve_step(params, cache, tokens):
+        logits, cache = api.decode_step(params, cache, tokens, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return jax.jit(
+        serve_step,
+        in_shardings=(shd.with_sharding(mesh, p_specs),
+                      shd.with_sharding(mesh, c_specs),
+                      NamedSharding(mesh, P(b))),
+        out_shardings=(NamedSharding(mesh, P(b)),
+                       NamedSharding(mesh, shd.logits_pspec(cfg, mesh, "decode")),
+                       shd.with_sharding(mesh, c_specs)),
+        donate_argnums=(1,) if donate else ())

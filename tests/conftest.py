@@ -1,0 +1,9 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run alone uses 512 placeholders);
+# cap compilation parallelism for the single-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

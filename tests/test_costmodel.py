@@ -1,0 +1,128 @@
+"""Analytical cost models vs the paper's published numbers (Tables I-V,
+VI/VII, Fig 3, eq. 7-11)."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel, csd, fpga, splitbrain
+
+
+def test_table1_gate_counts():
+    g = costmodel.gate_reduction()
+    assert g["generic_int8_gates"] == 1180
+    assert g["ita_gates"] == pytest.approx(243, abs=1)
+    assert g["ita_shift_add_tree"] == pytest.approx(156, abs=1)
+    assert g["ita_accumulator"] == pytest.approx(68, abs=1)
+    assert g["ita_pipeline_register"] == pytest.approx(19, abs=1)
+    assert g["reduction_x"] == pytest.approx(4.85, abs=0.05)
+
+
+def test_table2_energy():
+    e = costmodel.energy_comparison()
+    assert e["gpu_fp16"]["total_pj"] == pytest.approx(401.1, abs=0.5)
+    assert e["gpu_int8"]["total_pj"] == pytest.approx(201.0, abs=0.5)
+    assert e["ita"]["total_pj"] == pytest.approx(4.05, abs=0.05)
+    assert e["improvement_vs_int8"]["x"] == pytest.approx(49.6, abs=0.5)
+    assert e["ita"]["dram_pj"] == 0.0  # no memory hierarchy
+
+
+def test_system_power_matches_paper():
+    p = costmodel.system_power(tokens_per_s=20.0, params=7e9)
+    assert 1.0 <= p["device_w"] <= 1.3          # paper: 1.13 W
+    assert 6.0 <= p["system_w_lo"] <= 8.0       # paper: ~7 W
+    assert 11.0 <= p["system_w_hi"] <= 13.0     # paper: ~12 W
+
+
+def test_table4_die_areas():
+    a11 = costmodel.die_area_mm2(1.1e9)
+    assert a11["raw_mm2"] == pytest.approx(528, abs=1)        # §VI-D.1
+    assert a11["with_overheads_mm2"] == pytest.approx(850, abs=2)
+    assert a11["final_mm2"] == pytest.approx(520, abs=2)
+    a7 = costmodel.die_area_mm2(7e9)
+    assert a7["raw_mm2"] == pytest.approx(3360, abs=2)
+    assert a7["with_overheads_mm2"] == pytest.approx(5410, abs=5)
+    # paper "conservative" row: 3x routing, post-optimization -> 7885 mm^2
+    cons = costmodel.die_area_mm2(7e9, conservative=True)
+    assert cons["final_mm2"] == pytest.approx(7885, rel=0.15)
+
+
+def test_table4_unit_costs():
+    c11 = costmodel.unit_cost(1.1e9)
+    assert c11["config"] == "monolithic"
+    assert c11["silicon_cost"] == pytest.approx(52, abs=2)    # paper: $52
+    assert 60 <= c11["unit_cost"] <= 77                        # paper: $64-77
+    c7 = costmodel.unit_cost(7e9)
+    assert c7["n_chiplets"] == 8                               # paper: 8-chiplet
+    # NOTE: the paper's $14/chiplet ($165 total) is NOT reproducible from its
+    # own inputs: a 414 mm^2 28nm chiplet yields ~130 good dies/wafer ->
+    # >=$34/chiplet.  Our first-principles cost is ~2x the paper's claim;
+    # recorded as a reproduction finding in EXPERIMENTS.md.
+    assert 250 <= c7["unit_cost"] <= 420
+
+
+def test_table5_nre_amortization():
+    c = costmodel.unit_cost(1.1e9, volume=10_000)
+    assert c["nre_per_unit"] == pytest.approx(250, abs=1)      # paper: $250
+    assert c["unit_cost_with_nre"] == pytest.approx(314, abs=10)  # paper: $314
+    c1m = costmodel.unit_cost(1.1e9, volume=1_000_000)
+    assert c1m["nre_per_unit"] == pytest.approx(2.5, abs=0.1)
+
+
+def test_fig3_security_barrier():
+    b = costmodel.extraction_barrier()
+    assert b["software_dump_usd"] <= 2_000
+    assert b["ita_physical_re_usd"] >= 50_000
+    assert b["barrier_increase_x"] >= 25          # paper: 25x increase
+
+
+def test_tables67_fpga():
+    n = fpga.single_neuron_table()
+    assert n["lut_reduction_x"] == pytest.approx(1.81, abs=0.03)   # Table VII
+    assert n["hardwired_luts"] == pytest.approx(788, abs=10)
+    assert n["reg_reduction_x"] == pytest.approx(20.8, abs=0.2)
+    f = fpga.full_network_table()
+    assert f["n_macs"] == 16384
+    assert f["hardwired_over_capacity_x"] == pytest.approx(3.2, abs=0.1)
+    assert f["fits_baseline"] and not f["fits_hardwired"]          # Table VI
+    gap = fpga.fpga_vs_asic_gap()
+    assert gap["asic_gate_reduction_x"] > gap["fpga_lut_reduction_x"]
+
+
+def test_eq10_bytes_per_token():
+    tm = splitbrain.TrafficModel.llama2_7b()
+    assert tm.device_to_host_kv_bytes_per_layer() == 16 * 1024     # eq. 7
+    assert tm.host_to_device_attn_bytes_per_layer() == 8 * 1024    # eq. 8
+    assert tm.logits_bytes() == 64_000                             # eq. 9
+    # eq. 10: 832 KB/token (24 KiB x 32 layers + logits)
+    assert tm.bytes_per_token() == pytest.approx(832 * 1024, rel=0.01)
+    # eq. 11: ~16.64 MB/s at 20 tok/s
+    assert tm.bandwidth_bytes_per_s(20) == pytest.approx(16.64e6, rel=0.05)
+
+
+def test_table3_interface_latencies():
+    tm = splitbrain.TrafficModel.llama2_7b()
+    rows = {r["interface"]: r for r in tm.interface_table()}
+    assert rows["PCIe 3.0 x4"]["total_ms"] == pytest.approx(5.3, abs=0.1)
+    assert rows["PCIe 3.0 x4"]["tokens_per_s"] == pytest.approx(188, abs=3)
+    assert rows["Thunderbolt 4"]["total_ms"] == pytest.approx(5.2, abs=0.1)
+    assert rows["USB 3.0"]["total_ms"] == pytest.approx(7.9, abs=0.1)
+    assert rows["USB 3.0"]["tokens_per_s"] == pytest.approx(126, abs=3)
+    assert rows["USB 4.0"]["total_ms"] == pytest.approx(5.5, abs=0.1)
+
+
+def test_cpu_scenario_throughput():
+    """§VI-C.2: realistic CPU attention (50-100ms) -> 10-20 tok/s."""
+    tm = splitbrain.TrafficModel.llama2_7b()
+    row = tm.interface_latency(splitbrain.INTERFACES["pcie3x4"],
+                               host_attention_s=splitbrain.HOST_ATTENTION_CPU_S)
+    assert 10 <= row["tokens_per_s"] <= 20
+
+
+def test_gate_reduction_improves_on_real_distribution():
+    """Pruned+LAQ real weights beat the paper's uniform reference point."""
+    rng = np.random.default_rng(0)
+    from repro.core import quant
+    import jax.numpy as jnp
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32) * 0.1)
+    ql = quant.quantize_weights(w)
+    g = costmodel.gate_reduction(np.asarray(ql.codes))
+    assert g["reduction_x"] > 4.85

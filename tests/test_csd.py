@@ -1,0 +1,71 @@
+"""CSD encoding: exactness, non-adjacency, minimality — incl. property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import csd
+
+
+@given(st.integers(min_value=-(2**20), max_value=2**20))
+@settings(max_examples=300, deadline=None)
+def test_csd_reconstructs_value(n):
+    digits = csd.csd_encode(n)
+    assert sum(s * 2**sh for s, sh in digits) == n
+
+
+@given(st.integers(min_value=-(2**20), max_value=2**20))
+@settings(max_examples=300, deadline=None)
+def test_csd_non_adjacent_form(n):
+    shifts = sorted(sh for _, sh in csd.csd_encode(n))
+    assert all(b - a >= 2 for a, b in zip(shifts, shifts[1:]))
+
+
+@given(st.integers(min_value=-(2**15), max_value=2**15))
+@settings(max_examples=200, deadline=None)
+def test_csd_no_more_digits_than_binary(n):
+    # NAF is minimal-weight: never worse than plain binary popcount
+    assert csd.csd_nonzero_digits(n) <= max(1, bin(abs(n)).count("1") + (n < 0))
+
+
+@given(st.integers(min_value=-7, max_value=7),
+       st.lists(st.integers(min_value=-128, max_value=127), min_size=1,
+                max_size=32))
+@settings(max_examples=200, deadline=None)
+def test_shift_add_bit_exact(w, xs):
+    """The synthesized shift-add tree equals integer multiplication exactly —
+    the core hardware-correctness invariant of the ITA MAC (paper §IV-C.2)."""
+    plan = csd.shift_add_plan(w)
+    x = jnp.asarray(xs, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(csd.shift_add_eval(plan, x)),
+                                  w * np.asarray(xs))
+
+
+def test_paper_example_7():
+    # paper: 7 = CSD 100-1 (one subtraction), vs binary 0111 (three adds)
+    assert csd.csd_nonzero_digits(7) == 2
+    assert csd.binary_nonzero_digits(7) == 3
+    digits = dict((sh, s) for s, sh in csd.csd_encode(7))
+    assert digits == {3: 1, 0: -1}  # 8 - 1
+
+
+def test_shift_add_plan_adder_counts():
+    assert csd.shift_add_plan(0).num_adders == 0      # pruned
+    assert csd.shift_add_plan(4).num_adders == 0      # pure wire (shift)
+    assert csd.shift_add_plan(7).num_adders == 1      # 8 - 1
+    assert csd.shift_add_plan(5).num_adders == 1      # 4 + 1
+
+
+def test_adder_reduction_matches_paper_range_int8():
+    """Paper §IV-C.1: CSD reduces shift-add adders by 30-40% on average."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(-127, 128, 200_000)
+    stats = csd.adder_reduction(vals, num_bits=8)
+    assert 0.30 <= stats["adder_reduction_frac"] <= 0.45, stats
+
+
+def test_cost_tables_match_scalar_function():
+    table = csd.csd_cost_table(4)
+    for i, v in enumerate(range(-8, 8)):
+        assert table[i] == csd.csd_nonzero_digits(v)

@@ -1,0 +1,93 @@
+"""Correctness of every §Perf optimization variant vs the baseline path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ref
+from repro.models import api
+
+
+def _no_remat(cfg):
+    return dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+
+
+def test_h1_chunked_wkv_equals_naive_in_model():
+    cfg = _no_remat(get_config("rwkv6-7b").reduced())
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    base, _ = api.forward(params, toks, cfg)
+    opt, _ = api.forward(params, toks, dataclasses.replace(cfg, rwkv_chunk=16))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), atol=5e-2)
+
+
+def test_h5_associative_ssm_equals_sequential_in_model():
+    cfg = _no_remat(get_config("hymba-1.5b").reduced())
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab_size)
+    base, _ = api.forward(params, toks, cfg)
+    opt, _ = api.forward(params, toks,
+                         dataclasses.replace(cfg, ssm_scan="associative"))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), atol=5e-2)
+
+
+@pytest.mark.parametrize("strong_decay", [False, True])
+def test_h5_associative_oracle_sweep(strong_decay):
+    rng = np.random.default_rng(3)
+    B, T, D, N = 2, 48, 8, 4
+    x = jnp.asarray(rng.normal(size=(B, T, D)).astype(np.float32))
+    hi = 2.0 if strong_decay else 0.3
+    delta = jnp.asarray(rng.uniform(0.01, hi, (B, T, D)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 16.0, (D, N)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    y0, s0 = ref.selective_scan(x, delta, A, Bm, Cm)
+    y1, s1 = ref.selective_scan_assoc(x, delta, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_h1_chunked_oracle_sweep(chunk):
+    rng = np.random.default_rng(4)
+    B, H, T, D = 1, 2, 64, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(B, H, T, D)).astype(np.float32))
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.8, 0.9995, (B, H, T, D)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(H, D)).astype(np.float32))
+    y0, s0 = ref.rwkv6_scan(r, k, v, w, u)
+    y1, s1 = ref.rwkv6_scan_chunked(r, k, v, w, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-3)
+
+
+def test_h2_cache_write_paths_agree():
+    from repro.models.layers import cache_write
+    rng = np.random.default_rng(5)
+    cache = jnp.asarray(rng.normal(size=(3, 2, 16, 4)).astype(np.float32))
+    new = jnp.asarray(rng.normal(size=(3, 2, 1, 4)).astype(np.float32))
+    pos = jnp.asarray([5, 5, 5], jnp.int32)  # lockstep
+    a = cache_write(cache, new, pos, aligned=True)
+    b = cache_write(cache, new, pos, aligned=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # ragged positions only supported by the masked path
+    posr = jnp.asarray([1, 7, 3], jnp.int32)
+    c = cache_write(cache, new, posr, aligned=False)
+    for i, p in enumerate([1, 7, 3]):
+        np.testing.assert_allclose(np.asarray(c[i, :, p]), np.asarray(new[i, :, 0]))
+
+
+def test_h3_quantized_model_forward_close():
+    cfg = _no_remat(get_config("granite-8b").reduced())
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = api.quantize_model(params, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 16), 0, cfg.vocab_size)
+    f, _ = api.forward(params, toks, cfg)
+    q, _ = api.forward(qparams, toks, cfg)
+    cc = np.corrcoef(np.asarray(f, np.float32).ravel(),
+                     np.asarray(q, np.float32).ravel())[0, 1]
+    assert cc > 0.95, cc

@@ -1,0 +1,78 @@
+"""Logic-aware quantization: error bounds, pruning, LAQ trade-off."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import csd, quant
+
+
+def _rand_w(seed, shape=(128, 64), scale=0.1):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale)
+
+
+def test_roundtrip_error_bounded():
+    w = _rand_w(0)
+    ql = quant.quantize_weights(w, logic_aware=False, prune_threshold=0.0)
+    deq = quant.dequantize(ql, jnp.float32)
+    # symmetric int4: error <= scale/2 per channel
+    scale = np.asarray(ql.scales)
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    assert (err <= scale / 2 + 1e-6).all()
+
+
+def test_laq_error_bounded_by_slack():
+    w = _rand_w(1)
+    ql = quant.quantize_weights(w, logic_aware=True, prune_threshold=0.0,
+                                laq_slack=0.35)
+    deq = quant.dequantize(ql, jnp.float32)
+    scale = np.asarray(ql.scales)
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    assert (err <= scale * (0.5 + 0.35) + 1e-6).all()
+
+
+def test_laq_reduces_adders_vs_plain_rounding():
+    """The point of LAQ: cheaper CSD codes for ~equal quality (§IV-C)."""
+    w = _rand_w(2, shape=(512, 256))
+    plain = quant.quantize_weights(w, logic_aware=False)
+    laq = quant.quantize_weights(w, logic_aware=True)
+    table = csd.csd_cost_table(4)
+    cost = lambda q: int(table[np.asarray(q.codes).astype(np.int64) + 8].sum())
+    assert cost(laq) < cost(plain)
+
+
+def test_pruned_fraction_in_paper_range():
+    """§IV-C.3: 15-25% of weights prune at the 2^-6 threshold for typical
+    (gaussian-ish) weight distributions."""
+    w = _rand_w(3, shape=(1024, 512))
+    ql = quant.quantize_weights(w)
+    frac = float(quant.pruned_fraction(ql))
+    assert 0.10 <= frac <= 0.30, frac
+
+
+def test_w4a8_matmul_matches_dequant_matmul():
+    w = _rand_w(4, shape=(96, 80))
+    x = _rand_w(5, shape=(7, 96), scale=1.0)
+    ql = quant.quantize_weights(w)
+    got = np.asarray(quant.w4a8_matmul_ref(x, ql, jnp.float32))
+    want = np.asarray(x) @ np.asarray(quant.dequantize(ql, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.02)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=50, deadline=None)
+def test_codes_always_int4_range(seed):
+    w = _rand_w(seed, shape=(32, 16), scale=float(1 + seed % 7))
+    ql = quant.quantize_weights(w)
+    codes = np.asarray(ql.codes)
+    assert codes.min() >= -7 and codes.max() <= 7
+
+
+def test_activation_quant_roundtrip():
+    x = _rand_w(6, shape=(4, 256), scale=3.0)
+    q, s = quant.quantize_activations_int8(x)
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(s) - np.asarray(x))
+    assert (err <= np.asarray(s) / 2 + 1e-6).all()

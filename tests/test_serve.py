@@ -1,0 +1,38 @@
+"""Production serving engine: batched generate over multiple families."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "rwkv6-7b"])
+def test_generate_batched(arch):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=24)
+    prompts = np.random.default_rng(0).integers(
+        1, cfg.vocab_size, (3, 4)).astype(np.int32)
+    out = eng.generate(prompts, max_new=5)
+    assert out["tokens"].shape == (3, 5)
+    assert (out["tokens"] >= 0).all() and (out["tokens"] < cfg.vocab_size).all()
+    assert out["tokens_per_s"] > 0
+
+
+def test_generate_deterministic():
+    cfg = get_config("stablelm-1.6b").reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=16)
+    prompts = np.full((2, 3), 7, np.int32)
+    a = eng.generate(prompts, max_new=4)["tokens"]
+    b = eng.generate(prompts, max_new=4)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[0], a[1])  # identical prompts, greedy

@@ -1,0 +1,169 @@
+"""Substrate tests: optimizer, data determinism/elasticity, checkpoint
+atomicity + elastic restore, preemption, HLO analyzer."""
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, DataLoader, global_batch_at_step
+from repro.train import optimizer as opt_mod
+
+
+# ------------------------------------------------------------------ optimizer
+def _quad_params():
+    return {"a": jnp.asarray([2.0, -3.0]), "b": {"c": jnp.ones((3, 3)) * 5}}
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_adamw_minimizes_quadratic(quantize):
+    cfg = opt_mod.AdamWConfig(lr=0.15, warmup_steps=1, total_steps=200,
+                              weight_decay=0.0, quantize_moments=quantize,
+                              moment_block=4)
+    params = _quad_params()
+    state = opt_mod.init_state(params, cfg)
+    loss = lambda p: jnp.sum(p["a"] ** 2) + jnp.sum((p["b"]["c"] - 1.0) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, m = opt_mod.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+    assert int(state["step"]) == 200
+
+
+def test_adamw_grad_clip_and_schedule():
+    cfg = opt_mod.AdamWConfig(lr=1e-2, grad_clip=1.0, warmup_steps=10,
+                              total_steps=100)
+    assert float(opt_mod.lr_schedule(cfg, jnp.asarray(0))) < 1e-2 * 0.2
+    assert float(opt_mod.lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1e-2, rel=0.05)
+    assert float(opt_mod.lr_schedule(cfg, jnp.asarray(99))) <= 1e-2 * 0.15
+    params = {"a": jnp.zeros((4,))}
+    state = opt_mod.init_state(params, cfg)
+    huge = {"a": jnp.full((4,), 1e6)}
+    _, _, m = opt_mod.apply_updates(params, huge, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_quantized_moments_match_float_closely():
+    cfg_f = opt_mod.AdamWConfig(lr=0.05, warmup_steps=1, total_steps=50,
+                                weight_decay=0.0)
+    cfg_q = opt_mod.AdamWConfig(lr=0.05, warmup_steps=1, total_steps=50,
+                                weight_decay=0.0, quantize_moments=True,
+                                moment_block=8)
+    pf = _quad_params()
+    pq = _quad_params()
+    sf = opt_mod.init_state(pf, cfg_f)
+    sq = opt_mod.init_state(pq, cfg_q)
+    loss = lambda p: jnp.sum(p["a"] ** 2) + jnp.sum((p["b"]["c"] - 1.0) ** 2)
+    for _ in range(50):
+        pf, sf, _ = opt_mod.apply_updates(pf, jax.grad(loss)(pf), sf, cfg_f)
+        pq, sq, _ = opt_mod.apply_updates(pq, jax.grad(loss)(pq), sq, cfg_q)
+    np.testing.assert_allclose(np.asarray(pf["a"]), np.asarray(pq["a"]),
+                               atol=0.15)
+
+
+# ----------------------------------------------------------------------- data
+def test_data_deterministic_and_restartable():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8, seed=3)
+    a = global_batch_at_step(cfg, 5)
+    b = global_batch_at_step(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    loader = DataLoader(cfg, start_step=5)
+    c = next(loader)
+    np.testing.assert_array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_elastic_resharding():
+    """Concatenating 4 shards == the 1-shard global batch (elastic DP)."""
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8, seed=1)
+    full = global_batch_at_step(cfg, 7, shard=0, num_shards=1)
+    parts = [global_batch_at_step(cfg, 7, shard=s, num_shards=4)["tokens"]
+             for s in range(4)]
+    np.testing.assert_array_equal(full["tokens"], np.concatenate(parts, 0))
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2, seed=0)
+    b = global_batch_at_step(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ----------------------------------------------------------------- checkpoint
+def _tree(x=1.0):
+    return {"w": jnp.full((4, 4), x), "opt": {"m": jnp.full((4, 4), x / 2),
+                                              "step": jnp.asarray(3)}}
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(float(s)), metadata={"step": s})
+    assert mgr.all_steps() == [3, 4]  # GC keeps last 2
+    restored, meta = mgr.restore(_tree())
+    assert meta["step"] == 4
+    assert float(restored["w"][0, 0]) == 4.0
+
+
+def test_checkpoint_atomicity_crash_mid_write(tmp_path):
+    """A stale tmp dir (simulated crash) must never shadow a good ckpt."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1.0), metadata={"step": 1})
+    # simulate a crashed writer: tmp dir without manifest
+    os.makedirs(os.path.join(str(tmp_path), "tmp.2.999"))
+    # and a half-written final dir without manifest
+    os.makedirs(os.path.join(str(tmp_path), "step_2"))
+    assert mgr.latest_step() == 1
+    restored, meta = mgr.restore(_tree())
+    assert meta["step"] == 1
+
+
+def test_checkpoint_elastic_restore_resharding(tmp_path):
+    """Restore device_puts onto whatever sharding the new mesh uses."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(2.0), metadata={"step": 1})
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), _tree())
+    restored, _ = mgr.restore(_tree(), shardings=sh)
+    assert restored["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(7, _tree(7.0), metadata={"step": 7})
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+# ------------------------------------------------------------- HLO analyzer
+def test_hlo_analyzer_counts_scan_bodies():
+    """Trip-count weighting: a 6-iteration scan of a matmul must count 6x."""
+    import jax
+    from repro.launch import hlo_analysis as H
+
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), ()
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    w = jax.ShapeDtypeStruct((6, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    compiled = jax.jit(f).lower(w, x).compile()
+    totals = H.analyze(compiled.as_text())
+    want = 6 * 2 * 8 * 32 * 32  # 6 iterations x 2mnk
+    assert totals.flops_per_chip == pytest.approx(want, rel=0.01)
+
+
+def test_hlo_analyzer_collective_bytes():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import hlo_analysis as H
+    mesh = jax.make_mesh((1,), ("data",))
+    # psum over a single-device axis still emits an all-reduce in HLO only if
+    # the partitioner keeps it; accept zero-or-positive but parse cleanly
+    f = jax.jit(lambda x: x * 2, in_shardings=NamedSharding(mesh, P()))
+    compiled = f.lower(jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+    totals = H.analyze(compiled.as_text())
+    assert totals.coll_bytes_per_chip >= 0.0
