@@ -17,6 +17,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BT = 256
 
+# renamed TPUCompilerParams -> CompilerParams across pallas releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sfinal_ref, s_ref, *,
             bt: int, n_t: int):
@@ -75,7 +79,7 @@ def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -22,6 +22,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 256, 256, 512
 
+# renamed TPUCompilerParams -> CompilerParams across pallas releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(x_ref, xs_ref, w_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
     """One (bm, bn) output tile; accumulate over the K grid dimension."""
@@ -74,7 +78,7 @@ def w4a8_matmul(qx: jnp.ndarray, x_scale: jnp.ndarray, codes: jnp.ndarray,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qx, x_scale, codes, ws2d)

@@ -41,6 +41,41 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
     return family_module(cfg).decode_step(params, cache, tokens, cfg)
 
 
+def _prefill_fits(cache, prompt_len: int) -> bool:
+    """True when every KV slot can hold the whole prompt as one block."""
+    kv = cache.get("k") if isinstance(cache, dict) else None
+    if not isinstance(kv, list):
+        return False
+    return all(a.shape[4] >= prompt_len for a in kv)
+
+
+def prefill(params, cache, tokens, cfg: ModelConfig):
+    """Fill a fresh cache with a whole prompt in one fused call.
+
+    tokens (B, T) -> (last-position logits (B, V), cache with len += T).
+    Dispatches to the family module's block ``prefill`` when available and
+    the cache geometry allows it (lm); otherwise falls back to a
+    ``lax.scan`` of decode_step — still a single program, one dispatch.
+    """
+    mod = family_module(cfg)
+    T = tokens.shape[1]
+    if hasattr(mod, "prefill") and _prefill_fits(cache, T):
+        # The block prefill writes at slot 0 with positions 0..T-1: it is
+        # only correct on a FRESH cache.  Under jit ``len`` is a tracer and
+        # the contract is on the caller; eager misuse is caught here.
+        ln = cache.get("len")
+        if isinstance(ln, jnp.ndarray) and not isinstance(ln, jax.core.Tracer):
+            assert int(ln.max()) == 0, "prefill requires an empty cache"
+        return mod.prefill(params, cache, tokens, cfg)
+
+    def body(c, tok):
+        logits, c = mod.decode_step(params, c, tok, cfg)
+        return c, logits
+
+    cache, logits = jax.lax.scan(body, cache, tokens.T)
+    return logits[-1], cache
+
+
 def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
             aux_weight: float = 0.01):
     """Next-token cross-entropy (+ MoE load-balance aux)."""

@@ -20,17 +20,20 @@ def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jnp.ndarray
     return jax.random.uniform(key, (in_dim, out_dim), dtype, -scale, scale)
 
 
-def linear(x: jnp.ndarray, w) -> jnp.ndarray:
+def linear(x: jnp.ndarray, w, use_pallas: Optional[bool] = None) -> jnp.ndarray:
     """Apply a linear map; ``w`` is a raw (in,out) array or a QuantizedLinear.
 
     The quantized branch is the ITA device datapath: INT8 activations times
     hardwired INT4 codes (see core/quant.py, kernels/w4a8_matmul.py).
+    ``use_pallas`` selects the Pallas W4A8 kernel for the quantized branch
+    (None defers to the ``kernels.ops`` module default).
     """
     if isinstance(w, quant.QuantizedLinear):
         shape = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
         qx, xs = quant.quantize_activations_int8(x2)
-        y = ops.w4a8_matmul(qx, xs, w.codes, w.scales, out_dtype=x.dtype)
+        y = ops.w4a8_matmul(qx, xs, w.codes, w.scales, out_dtype=x.dtype,
+                            use_pallas=use_pallas)
         return y.reshape(*shape, w.codes.shape[-1])
     return x @ w.astype(x.dtype)
 
@@ -56,9 +59,11 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.
     return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
 
 
-def swiglu(x: jnp.ndarray, w1, w3, w2) -> jnp.ndarray:
+def swiglu(x: jnp.ndarray, w1, w3, w2,
+           use_pallas: Optional[bool] = None) -> jnp.ndarray:
     """FFN(x) = W2 . (silu(W1 x) * (W3 x)) — eq. (4)/(5) of the paper."""
-    return linear(jax.nn.silu(linear(x, w1)) * linear(x, w3), w2)
+    return linear(jax.nn.silu(linear(x, w1, use_pallas))
+                  * linear(x, w3, use_pallas), w2, use_pallas)
 
 
 # ----------------------------------------------------------------------------
@@ -76,12 +81,12 @@ def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
 
 
 def qkv_project(p: dict, x: jnp.ndarray, num_heads: int, num_kv_heads: int,
-                head_dim: int):
+                head_dim: int, use_pallas: Optional[bool] = None):
     """The ITA device phase of attention: static linear maps only."""
     B, T, _ = x.shape
-    q = linear(x, p["wq"]).reshape(B, T, num_heads, head_dim).transpose(0, 2, 1, 3)
-    k = linear(x, p["wk"]).reshape(B, T, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
-    v = linear(x, p["wv"]).reshape(B, T, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    q = linear(x, p["wq"], use_pallas).reshape(B, T, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = linear(x, p["wk"], use_pallas).reshape(B, T, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = linear(x, p["wv"], use_pallas).reshape(B, T, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
     return q, k, v
 
 

@@ -190,6 +190,31 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
 # ----------------------------------------------------------------------------
 # KV cache + decode
 # ----------------------------------------------------------------------------
+def _block_qkv(pj, x, positions, cfg: ModelConfig):
+    """Shared block head for prefill/decode: pre-norm, QKV projection, rope."""
+    xn = L.rmsnorm(x, pj["ln_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(pj["attn"], xn, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.resolved_head_dim)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_tail(pj, x, o, cfg: ModelConfig):
+    """Shared block tail for prefill/decode: attention-output projection,
+    FFN (dense or MoE), both residual adds.  o: (B, H, T, hd)."""
+    B, T = x.shape[:2]
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.num_heads * cfg.resolved_head_dim)
+    x = x + L.linear(o, pj["attn"]["wo"])
+    y = L.rmsnorm(x, pj["ln_mlp"], cfg.norm_eps)
+    if cfg.moe:
+        out, _ = moe_mod.moe_apply(pj["moe"], y, cfg.moe)
+    else:
+        out = L.swiglu(y, pj["mlp"]["w1"], pj["mlp"]["w3"], pj["mlp"]["w2"])
+    return x + out
+
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                frontend: Optional[jnp.ndarray] = None, params=None) -> Dict[str, Any]:
     n_groups, group_size = group_layout(cfg)
@@ -213,13 +238,73 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def prefill(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Fill a FRESH KV cache with a whole prompt in one forward-style pass.
+
+    tokens (B, T) -> (last-position logits (B, V), cache with len = T).
+    One fused program instead of T sequential decode steps: QKV for the full
+    prompt, block-write into the cache, causal self-attention over the
+    prompt.  Requires every cache slot to hold T tokens (``api.prefill``
+    falls back to a scanned decode otherwise) and an empty cache.
+    """
+    n_groups, group_size = group_layout(cfg)
+    P = len(cfg.layer_pattern)
+    T = tokens.shape[1]
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    positions = jnp.arange(T)
+
+    def group_fn(x, group_in):
+        gp = group_in["blocks"]
+        new_k, new_v = [], []
+        for j in range(group_size):
+            slot = j % P
+            spec = cfg.layer_pattern[slot]
+            pj = jax.tree.map(lambda a: a[j], gp)
+            kc = group_in["k"][slot][j // P]
+            vc = group_in["v"][slot][j // P]
+            q, k, v = _block_qkv(pj, x, positions, cfg)
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+            o = ops.attention(q, k, v, causal=True, window=spec.window,
+                              softcap=cfg.softcap, use_pallas=cfg.use_pallas)
+            x = _block_tail(pj, x, o, cfg)
+            new_k.append(kc)
+            new_v.append(vc)
+        if cfg.cross_attn_every:
+            kv = (group_in["cross_k"], group_in["cross_v"])
+            x = _cross_apply(group_in["cross"], x, kv, cfg)
+        upd = {
+            "k": [jnp.stack(new_k[s::P]) for s in range(P)],
+            "v": [jnp.stack(new_v[s::P]) for s in range(P)],
+        }
+        return x, upd
+
+    xs = {"blocks": params["blocks"], "k": cache["k"], "v": cache["v"]}
+    if cfg.cross_attn_every:
+        xs["cross"] = params["cross"]
+        xs["cross_k"] = cache["cross_k"]
+        xs["cross_v"] = cache["cross_v"]
+    x, upd = jax.lax.scan(group_fn, x, xs)
+
+    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.linear(x[:, -1], head).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
+    new_cache["len"] = cache["len"] + T
+    return logits, new_cache
+
+
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
     """One decode step. tokens (B,) -> (logits (B, V), new_cache)."""
     n_groups, group_size = group_layout(cfg)
     P = len(cfg.layer_pattern)
-    B = tokens.shape[0]
     dtype = jnp.dtype(cfg.dtype)
-    hd = cfg.resolved_head_dim
     x = params["embed"][tokens][:, None, :].astype(dtype)
     if cfg.tie_embeddings:
         x = x * math.sqrt(cfg.d_model)
@@ -235,11 +320,7 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
             pj = jax.tree.map(lambda a: a[j], gp)
             kc = group_in["k"][slot][j // P]
             vc = group_in["v"][slot][j // P]
-            xn = L.rmsnorm(x, pj["ln_attn"], cfg.norm_eps)
-            q, k, v = L.qkv_project(pj["attn"], xn, cfg.num_heads,
-                                    cfg.num_kv_heads, hd)
-            q = L.rope(q, positions, cfg.rope_theta)
-            k = L.rope(k, positions, cfg.rope_theta)
+            q, k, v = _block_qkv(pj, x, positions, cfg)
             S = kc.shape[2]
             if spec.window and spec.window <= S:
                 idx = pos % S                 # ring buffer for local layers
@@ -263,14 +344,7 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
                                          softcap=cfg.softcap,
                                          dist_axis=dist_axis,
                                          batch_axes=cfg.parallel.batch_axes)
-            o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
-            x = x + L.linear(o, pj["attn"]["wo"])
-            y = L.rmsnorm(x, pj["ln_mlp"], cfg.norm_eps)
-            if cfg.moe:
-                out, _ = moe_mod.moe_apply(pj["moe"], y, cfg.moe)
-            else:
-                out = L.swiglu(y, pj["mlp"]["w1"], pj["mlp"]["w3"], pj["mlp"]["w2"])
-            x = x + out
+            x = _block_tail(pj, x, o, cfg)
             new_k.append(kc)
             new_v.append(vc)
         if cfg.cross_attn_every:

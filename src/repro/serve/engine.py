@@ -4,6 +4,12 @@ Wraps the jitted ``prefill``/``serve_step`` callables (the same ones the
 multi-pod dry-run compiles) behind a request-batch API.  On real hardware the
 mesh is the production mesh; on CPU it serves reduced configs for tests and
 examples.
+
+The default (``fused=True``) path compiles the whole request into two
+programs: one ``api.prefill`` call that fills the KV cache with the entire
+prompt, and one ``lax.scan``-fused decode loop that emits every generated
+token in a single dispatch (DESIGN.md §1).  ``fused=False`` keeps the
+original one-dispatch-per-token reference loop for parity testing.
 """
 from __future__ import annotations
 
@@ -22,12 +28,16 @@ from repro.train import step as step_mod
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128):
+    def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128,
+                 fused: bool = True):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh if mesh is not None else make_test_mesh()
         self.max_len = max_len
+        self.fused = fused
         self._serve_step = None
+        self._prefill_jit: Dict[int, Any] = {}   # keyed by prompt_len
+        self._loop_jit: Dict[int, Any] = {}      # keyed by steps
 
     def _get_serve_step(self, cache):
         if self._serve_step is None:
@@ -35,28 +45,67 @@ class ServeEngine:
                 self.cfg, self.mesh, self.params, cache, donate=False)
         return self._serve_step
 
+    def _get_prefill(self, cache, prompt_len: int):
+        if prompt_len not in self._prefill_jit:
+            self._prefill_jit[prompt_len] = step_mod.make_cache_prefill(
+                self.cfg, self.mesh, self.params, cache)
+        return self._prefill_jit[prompt_len]
+
+    def _get_decode_loop(self, cache, steps: int):
+        if steps not in self._loop_jit:
+            self._loop_jit[steps] = step_mod.make_decode_loop(
+                self.cfg, self.mesh, self.params, cache, steps)
+        return self._loop_jit[steps]
+
     def generate(self, prompts: np.ndarray, max_new: int = 16,
-                 frontend: Optional[jnp.ndarray] = None) -> Dict[str, Any]:
+                 frontend: Optional[jnp.ndarray] = None,
+                 fused: Optional[bool] = None) -> Dict[str, Any]:
         """Greedy-decode a batch. prompts: (B, T0) int32 (right-aligned)."""
+        if fused is None:
+            fused = self.fused
         cfg = self.cfg
         B, T0 = prompts.shape
         with self.mesh:
             cache = api.init_cache(cfg, B, self.max_len, frontend=frontend,
                                    params=self.params)
-            step = self._get_serve_step(cache)
-            tok = jnp.asarray(prompts[:, 0], jnp.int32)
-            # prefill via repeated decode (KV append); the one-shot
-            # api.forward prefill path is exercised by the dry-run cells
-            for t in range(1, T0):
-                _, _, cache = step(self.params, cache, tok)
-                tok = jnp.asarray(prompts[:, t], jnp.int32)
-            out = []
+            if not fused:
+                return self._generate_stepwise(cache, prompts, max_new)
+            prompts_j = jnp.asarray(prompts, jnp.int32)
+            tok = prompts_j[:, -1]
+            tp0 = time.perf_counter()
+            if T0 > 1:
+                # one fused api.forward-style pass fills the cache with the
+                # whole prompt (no T0 Python-loop decode steps)
+                prefill = self._get_prefill(cache, T0 - 1)
+                _, cache = prefill(self.params, cache, prompts_j[:, :-1])
+            prefill_s = time.perf_counter() - tp0
+            loop = self._get_decode_loop(cache, max_new)
             t0 = time.perf_counter()
-            for _ in range(max_new):
-                tok, logits, cache = step(self.params, cache, tok)
-                out.append(np.asarray(tok))
+            toks, _, cache = loop(self.params, cache, tok)
+            toks = jax.block_until_ready(toks)
             dt = time.perf_counter() - t0
+        return {"tokens": np.asarray(toks),
+                "tokens_per_s": B * max_new / dt,
+                "decode_s": dt,
+                "prefill_s": prefill_s}
+
+    def _generate_stepwise(self, cache, prompts: np.ndarray, max_new: int):
+        """Reference loop: one jitted dispatch per token (prefill included)."""
+        step = self._get_serve_step(cache)
+        tok = jnp.asarray(prompts[:, 0], jnp.int32)
+        tp0 = time.perf_counter()
+        for t in range(1, prompts.shape[1]):
+            _, _, cache = step(self.params, cache, tok)
+            tok = jnp.asarray(prompts[:, t], jnp.int32)
+        prefill_s = time.perf_counter() - tp0
+        out = []
+        t0 = time.perf_counter()
+        for _ in range(max_new):
+            tok, logits, cache = step(self.params, cache, tok)
+            out.append(np.asarray(tok))
+        dt = time.perf_counter() - t0
         tokens = np.stack(out, axis=1)
         return {"tokens": tokens,
-                "tokens_per_s": B * max_new / dt,
-                "decode_s": dt}
+                "tokens_per_s": tokens.shape[0] * max_new / dt,
+                "decode_s": dt,
+                "prefill_s": prefill_s}

@@ -12,24 +12,37 @@ the *measured* per-token interface bytes can be asserted equal to the
 analytical TrafficModel (eq. 7-11) — that equality is a test
 (tests/test_splitbrain.py) and a benchmark (table3_interface).
 
+Two execution paths (DESIGN.md §1):
+
+  jit=True (default) — parameters and the KV cache are stacked pytrees with
+      a leading layer axis ``(L, ...)``; one ``jax.lax.scan`` sweeps the
+      depth and the whole per-token step is a single jitted dispatch with
+      donated cache buffers.  Boundary accounting happens at trace time:
+      every crossing shape is static, so the meter is replayed host-side per
+      token and stays byte-identical to the eager log.
+  jit=False — the original per-layer Python loop, kept as the bit-level
+      reference for parity tests and as the readable spec of the protocol.
+
+``generate()`` fuses the *multi-token* loop too: prompt forcing plus greedy
+decode run inside one jitted ``lax.scan`` — one dispatch per generation.
+
 This engine covers the paper's own configs (decoder-only LM family); the
 production serving path for all 10 archs is serve/engine.py.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import quant
-from repro.core.splitbrain import ACT_BYTES, TrafficMeter, TrafficModel
+from repro.core.splitbrain import TrafficMeter, TrafficModel
 from repro.kernels import ops
 from repro.models import api
 from repro.models import layers as L
-from repro.models import transformer
 
 
 def traffic_model_for(cfg: ModelConfig) -> TrafficModel:
@@ -41,13 +54,20 @@ def traffic_model_for(cfg: ModelConfig) -> TrafficModel:
     )
 
 
+def _stack_layers(tree, num_layers: int):
+    """Collapse the (n_groups, group_size, ...) leading dims to (L, ...)."""
+    return jax.tree.map(lambda a: a.reshape((num_layers,) + a.shape[2:]), tree)
+
+
 class SplitBrainEngine:
     """Greedy decoding with an explicit host/device boundary."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
-                 quantize: bool = True):
+                 quantize: bool = True, jit: bool = True,
+                 use_pallas: bool = False):
         assert cfg.family == "lm" and len(cfg.layer_pattern) == 1, \
             "split-brain reference engine covers the paper's LM configs"
+        assert not cfg.moe, "split-brain reference engine covers dense FFNs"
         self.cfg = cfg
         self.meter = TrafficMeter()
         # The "synthesis" step: weights become immutable INT4 codes.
@@ -55,15 +75,44 @@ class SplitBrainEngine:
                               if quantize else params)
         self.host_params = params  # norms/embedding stay host-side floats
         self.max_len = max_len
+        self.jit = jit
+        self.use_pallas = use_pallas
+        # -- static hoisting: everything derivable from cfg/params is computed
+        #    once here, not per decode_token call.
         self._hd = cfg.resolved_head_dim
+        self._dtype = jnp.dtype(cfg.dtype)
+        self._n_layers = cfg.num_layers
+        # Stacked (L, ...) layer pytrees: device-phase projections (possibly
+        # QuantizedLinear codes+scales) and host-phase norm scales.  No
+        # per-layer Python lists anywhere on the hot path.
+        dev_blocks = self.device_params["blocks"]
+        host_blocks = self.host_params["blocks"]
+        self._weights = {
+            "layers": {
+                "attn": _stack_layers(dev_blocks["attn"], cfg.num_layers),
+                "mlp": _stack_layers(dev_blocks["mlp"], cfg.num_layers),
+                "ln_attn": _stack_layers(host_blocks["ln_attn"], cfg.num_layers),
+                "ln_mlp": _stack_layers(host_blocks["ln_mlp"], cfg.num_layers),
+            },
+            "embed": self.host_params["embed"],
+            "ln_final": self.host_params["ln_final"],
+            "head": self.device_params.get("lm_head"),
+        }
+        # Pre-computed per-token boundary-crossing byte counts (shapes are
+        # static) for the trace-time meter replay; per batch element.
+        self._decode_jit = jax.jit(self._token_step, donate_argnums=(1, 2))
+        self._generate_jit: Dict[Tuple[int, int], Any] = {}
 
     # ------------------------------------------------------------- device ops
+    # The eager reference path: each helper registers its boundary crossing
+    # on the meter at call time.
     def _device_qkv(self, layer_p, x):
         """ITA device: hardwired QKV projection (stateless)."""
         cfg = self.cfg
         self.meter.h2d("x_qkv_in", x.shape)
         q, k, v = L.qkv_project(layer_p["attn"], x, cfg.num_heads,
-                                cfg.num_kv_heads, self._hd)
+                                cfg.num_kv_heads, self._hd,
+                                use_pallas=self.use_pallas)
         # K, V stream back to the host KV cache (eq. 7); Q accompanies them
         # in the same DMA (the paper counts K/V only — Q stays on-device in
         # the ASIC pipeline; we ship it because our "device" is a function).
@@ -72,76 +121,221 @@ class SplitBrainEngine:
 
     def _device_attn_out(self, layer_p, attn):
         self.meter.h2d("attn_in", attn.shape)   # eq. 8
-        return L.linear(attn, layer_p["attn"]["wo"])
+        return L.linear(attn, layer_p["attn"]["wo"], self.use_pallas)
 
     def _device_ffn(self, layer_p, y):
         out = L.swiglu(y, layer_p["mlp"]["w1"], layer_p["mlp"]["w3"],
-                       layer_p["mlp"]["w2"])
+                       layer_p["mlp"]["w2"], use_pallas=self.use_pallas)
         return out
 
     def _device_logits(self, x):
-        head = self.device_params.get("lm_head")
-        logits = L.linear(x, head)
+        head = self._weights["head"]
+        logits = L.linear(x, head, self.use_pallas)
         self.meter.d2h("logits", logits.shape)   # eq. 9
         return logits
 
-    # --------------------------------------------------------------- decoding
-    def decode_token(self, cache: Dict[str, Any], token: jnp.ndarray):
-        """One token through the split-brain loop. token: (B,)."""
+    def _meter_token(self, batch: int) -> None:
+        """Replay one token's boundary crossings on the meter.
+
+        The jitted path cannot log from inside the trace, but every crossing
+        shape is static, so this host-side replay is byte-identical (names,
+        order, and sizes) to the eager path's runtime log.
+        """
+        cfg = self.cfg
+        for _ in range(self._n_layers):
+            self.meter.h2d("x_qkv_in", (batch, 1, cfg.d_model))
+            self.meter.d2h("kv_out", (2, batch, cfg.num_kv_heads, 1, self._hd))
+            self.meter.h2d("attn_in", (batch, 1, cfg.num_heads * self._hd))
+        self.meter.d2h("logits", (batch, 1, cfg.vocab_size))
+
+    # --------------------------------------------------------- fused hot path
+    def _token_step(self, weights, k_cache, v_cache, length, token):
+        """One split-brain token, traceable: lax.scan over the stacked layers.
+
+        k_cache/v_cache: (L, B, Hkv, S, hd).  Returns
+        (next_tok, logits, new_k, new_v, new_length).
+        """
         cfg = self.cfg
         B = token.shape[0]
         hd = self._hd
+        pl = self.use_pallas
         # HOST: embedding lookup (vocabulary table, random access)
-        x = self.host_params["embed"][token][:, None, :].astype(jnp.dtype(cfg.dtype))
+        x = weights["embed"][token][:, None, :].astype(self._dtype)
+        pos = length
+        positions = pos[:, None]
+
+        def layer_fn(x, per_layer):
+            p, kc, vc = per_layer
+            # HOST: pre-norm (dynamic statistics)
+            xn = L.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+            # DEVICE: QKV projection
+            q, k, v = L.qkv_project(p["attn"], xn, cfg.num_heads,
+                                    cfg.num_kv_heads, hd, use_pallas=pl)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            # HOST: KV-cache append + attention
+            kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+                c, kk, (0, i, 0)))(kc, k[:, :, 0:1], pos)
+            vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+                c, vv, (0, i, 0)))(vc, v[:, :, 0:1], pos)
+            attn = ops.decode_attention(q, kc, vc, pos + 1,
+                                        softcap=cfg.softcap)
+            attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
+            # DEVICE: output projection;  HOST: residual add
+            x = x + L.linear(attn, p["attn"]["wo"], pl)
+            # HOST norm -> DEVICE FFN -> HOST residual
+            y = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+            x = x + L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"],
+                             p["mlp"]["w2"], use_pallas=pl)
+            return x, (kc, vc)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            layer_fn, x, (weights["layers"], k_cache, v_cache))
+        x = L.rmsnorm(x, weights["ln_final"], cfg.norm_eps)
+        logits = L.linear(x, weights["head"], pl)[:, 0]
+        # HOST: sampling
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_k, new_v, length + 1
+
+    def _generate_fn(self, T0: int, steps: int):
+        """Build the fused multi-token loop: prompt forcing + greedy decode
+        inside one lax.scan — a single dispatch per generation."""
+
+        def gen(weights, k_cache, v_cache, length, prompts):
+            def body(carry, t):
+                k, v, ln, tok = carry
+                nxt, _, k, v, ln = self._token_step(weights, k, v, ln, tok)
+                # teacher-force the remaining prompt tokens, then free-run
+                forced = jax.lax.dynamic_slice_in_dim(
+                    prompts, jnp.minimum(t + 1, T0 - 1), 1, axis=1)[:, 0]
+                tok = jnp.where(t + 1 < T0, forced, nxt)
+                return (k, v, ln, tok), nxt
+
+            carry = (k_cache, v_cache, length, prompts[:, 0])
+            (k, v, ln, _), ys = jax.lax.scan(body, carry, jnp.arange(steps))
+            # ys[t] is the token produced after consuming input t; outputs
+            # from step T0-1 onward are the generated continuation.
+            return ys[T0 - 1:].T, k, v, ln
+
+        return jax.jit(gen, donate_argnums=(1, 2))
+
+    # --------------------------------------------------------------- decoding
+    def decode_token(self, cache: Dict[str, Any], token: jnp.ndarray):
+        """One token through the split-brain loop. token: (B,).
+
+        The jitted path donates the cache buffers: use the *returned* cache,
+        the one passed in is consumed.
+        """
+        if not self.jit:
+            return self.decode_token_eager(cache, token)
+        self._meter_token(token.shape[0])
+        next_tok, logits, k, v, length = self._decode_jit(
+            self._weights, cache["k"], cache["v"], cache["len"], token)
+        return next_tok, logits, {"k": k, "v": v, "len": length}
+
+    def decode_token_eager(self, cache: Dict[str, Any], token: jnp.ndarray):
+        """The reference per-layer Python loop (meter logs at runtime)."""
+        cfg = self.cfg
+        B = token.shape[0]
+        hd = self._hd
+        x = self._weights["embed"][token][:, None, :].astype(self._dtype)
         pos = cache["len"]
         positions = pos[:, None]
 
-        n_groups, group_size = transformer.group_layout(cfg)
-        dev_blocks = self.device_params["blocks"]
-        host_blocks = self.host_params["blocks"]
-        for g in range(n_groups):
-            for j in range(group_size):
-                idx = (g, j)
-                dev_p = jax.tree.map(lambda a: a[idx[0]][idx[1]], dev_blocks)
-                host_p = jax.tree.map(lambda a: a[idx[0]][idx[1]], host_blocks)
-                layer = g * group_size + j
-                # HOST: pre-norm (dynamic statistics)
-                xn = L.rmsnorm(x, host_p["ln_attn"], cfg.norm_eps)
-                # DEVICE: QKV projection
-                q, k, v = self._device_qkv(dev_p, xn)
-                q = L.rope(q, positions, cfg.rope_theta)
-                k = L.rope(k, positions, cfg.rope_theta)
-                # HOST: KV-cache append + attention
-                kc, vc = cache["k"][layer], cache["v"][layer]
-                kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
-                    c, kk, (0, i, 0)))(kc, k[:, :, 0:1], pos)
-                vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
-                    c, vv, (0, i, 0)))(vc, v[:, :, 0:1], pos)
-                cache["k"][layer], cache["v"][layer] = kc, vc
-                attn = ops.decode_attention(q, kc, vc, pos + 1,
-                                            softcap=cfg.softcap)
-                attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
-                # DEVICE: output projection;  HOST: residual add
-                x = x + self._device_attn_out(dev_p, attn)
-                # HOST norm -> DEVICE FFN -> HOST residual
-                y = L.rmsnorm(x, host_p["ln_mlp"], cfg.norm_eps)
-                x = x + self._device_ffn(dev_p, y)
+        new_k, new_v = [], []
+        for layer in range(self._n_layers):
+            p = jax.tree.map(lambda a: a[layer], self._weights["layers"])
+            # HOST: pre-norm (dynamic statistics)
+            xn = L.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+            # DEVICE: QKV projection
+            q, k, v = self._device_qkv(p, xn)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            # HOST: KV-cache append + attention
+            kc, vc = cache["k"][layer], cache["v"][layer]
+            kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+                c, kk, (0, i, 0)))(kc, k[:, :, 0:1], pos)
+            vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+                c, vv, (0, i, 0)))(vc, v[:, :, 0:1], pos)
+            attn = ops.decode_attention(q, kc, vc, pos + 1,
+                                        softcap=cfg.softcap)
+            attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
+            # DEVICE: output projection;  HOST: residual add
+            x = x + self._device_attn_out(p, attn)
+            # HOST norm -> DEVICE FFN -> HOST residual
+            y = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+            x = x + self._device_ffn(p, y)
+            new_k.append(kc)
+            new_v.append(vc)
 
-        x = L.rmsnorm(x, self.host_params["ln_final"], cfg.norm_eps)
+        x = L.rmsnorm(x, self._weights["ln_final"], cfg.norm_eps)
         logits = self._device_logits(x)[:, 0]
         # HOST: sampling
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        cache["len"] = cache["len"] + 1
-        return next_tok, logits, cache
+        return next_tok, logits, {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                                  "len": cache["len"] + 1}
+
+    def generate(self, prompts, max_new: int = 16) -> Dict[str, Any]:
+        """Greedy-decode a batch in ONE dispatch. prompts: (B, T0) int32.
+
+        Prompt tokens are teacher-forced through the same per-token step
+        (filling the KV cache), then ``max_new`` tokens free-run — all
+        inside a single jitted lax.scan.  ``decode_s``/``tokens_per_s``
+        cover the whole dispatch (prompt + decode), the same scope the
+        stepwise reference times.
+        """
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, T0 = prompts.shape
+        steps = T0 - 1 + max_new
+        assert steps <= self.max_len, (steps, self.max_len)
+        if not self.jit:
+            return self._generate_stepwise(prompts, max_new)
+        key = (T0, max_new)
+        if key not in self._generate_jit:
+            self._generate_jit[key] = self._generate_fn(T0, steps)
+        cache = self.init_cache(B)
+        t0 = time.perf_counter()
+        toks, k, v, length = self._generate_jit[key](
+            self._weights, cache["k"], cache["v"], cache["len"], prompts)
+        toks = jax.block_until_ready(toks)
+        dt = time.perf_counter() - t0
+        for _ in range(steps):
+            self._meter_token(B)
+        return {"tokens": np.asarray(toks),
+                "cache": {"k": k, "v": v, "len": length},
+                "tokens_per_s": B * max_new / dt,
+                "decode_s": dt}
+
+    def _generate_stepwise(self, prompts: jnp.ndarray, max_new: int):
+        """Token-at-a-time reference generation (eager decode loop).
+
+        Timed over the WHOLE generation (prompt forcing + decode), same
+        scope as the fused path's single dispatch, so the two tokens/s
+        figures are directly comparable.
+        """
+        B, T0 = prompts.shape
+        cache = self.init_cache(B)
+        tok = prompts[:, 0]
+        outs = []
+        t0 = time.perf_counter()
+        for t in range(1, T0):
+            _, _, cache = self.decode_token_eager(cache, tok)
+            tok = prompts[:, t]
+        for _ in range(max_new):
+            tok, _, cache = self.decode_token_eager(cache, tok)
+            outs.append(np.asarray(tok))
+        dt = time.perf_counter() - t0
+        return {"tokens": np.stack(outs, 1), "cache": cache,
+                "tokens_per_s": B * max_new / dt, "decode_s": dt}
 
     def init_cache(self, batch: int) -> Dict[str, Any]:
+        """Stacked KV cache: (L, B, Hkv, S, hd) — scan-sweepable, no lists."""
         cfg = self.cfg
-        hd = self._hd
+        shape = (cfg.num_layers, batch, cfg.num_kv_heads, self.max_len,
+                 self._hd)
         return {
-            "k": [jnp.zeros((batch, cfg.num_kv_heads, self.max_len, hd),
-                            jnp.dtype(cfg.dtype)) for _ in range(cfg.num_layers)],
-            "v": [jnp.zeros((batch, cfg.num_kv_heads, self.max_len, hd),
-                            jnp.dtype(cfg.dtype)) for _ in range(cfg.num_layers)],
+            "k": jnp.zeros(shape, self._dtype),
+            "v": jnp.zeros(shape, self._dtype),
             "len": jnp.zeros((batch,), jnp.int32),
         }
 

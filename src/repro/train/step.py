@@ -62,6 +62,60 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
     return wrap
 
 
+def make_cache_prefill(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
+                       donate: bool = True):
+    """One fused prompt->KV-cache fill (api.prefill) with sharded cache."""
+    p_specs = shd.param_pspecs(params_like, cfg, mesh)
+    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    b = shd.MeshAxes(mesh, cfg).resolve("batch")
+
+    def prefill_step(params, cache, tokens):
+        return api.prefill(params, cache, tokens, cfg)
+
+    return jax.jit(
+        prefill_step,
+        in_shardings=(shd.with_sharding(mesh, p_specs),
+                      shd.with_sharding(mesh, c_specs),
+                      NamedSharding(mesh, P(b, None))),
+        out_shardings=(NamedSharding(mesh, shd.logits_pspec(cfg, mesh, "decode")),
+                       shd.with_sharding(mesh, c_specs)),
+        donate_argnums=(1,) if donate else ())
+
+
+def make_decode_loop(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
+                     steps: int, donate: bool = True):
+    """``steps`` greedy decode iterations fused into ONE dispatch.
+
+    The whole multi-token loop is a jitted ``lax.scan`` over decode_step —
+    one program launch per generation instead of one per token.
+    Returns (tokens (B, steps), last_token (B,), cache).
+    """
+    p_specs = shd.param_pspecs(params_like, cfg, mesh)
+    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    b = shd.MeshAxes(mesh, cfg).resolve("batch")
+
+    def decode_loop(params, cache, tokens):
+        def body(carry, _):
+            cache, tok = carry
+            logits, cache = api.decode_step(params, cache, tok, cfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (cache, nxt), nxt
+
+        (cache, tok), ys = jax.lax.scan(body, (cache, tokens), None,
+                                        length=steps)
+        return jnp.swapaxes(ys, 0, 1), tok, cache
+
+    return jax.jit(
+        decode_loop,
+        in_shardings=(shd.with_sharding(mesh, p_specs),
+                      shd.with_sharding(mesh, c_specs),
+                      NamedSharding(mesh, P(b))),
+        out_shardings=(NamedSharding(mesh, P(b, None)),
+                       NamedSharding(mesh, P(b)),
+                       shd.with_sharding(mesh, c_specs)),
+        donate_argnums=(1,) if donate else ())
+
+
 def make_serve_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
                     donate: bool = True):
     """One decode step (the paper's per-token loop) with sharded KV cache."""
