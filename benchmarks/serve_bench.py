@@ -1,0 +1,200 @@
+"""Continuous-batching serve benchmark: slot scheduler vs sequential fused.
+
+Replays the same Poisson-arrival request trace through two serving
+disciplines on one ServeEngine:
+
+  sequential — the PR-1 baseline: requests served one at a time, each as a
+               fused prefill + one-dispatch decode loop (fast per request,
+               but concurrent arrivals queue behind the running one),
+  continuous — serve/scheduler.py: slot-based KV cache, bucketed B=1
+               prefill admits requests mid-flight, ONE persistent masked
+               batched decode step advances every active stream per
+               dispatch.
+
+Measures tokens/s, requests/s and mean per-request latency for both, and
+asserts the two structural invariants of the steady state:
+
+  * zero recompiles after warmup — counted with the XLA backend-compile
+    monitoring listener (serve/slots.py::CompileCounter), not assumed,
+  * interface-traffic exactness — measured meter bytes over the whole
+    continuous run == (sum over requests of T0-1+gen) * the analytical
+    eq. 7-10 bytes/token.
+
+Emits BENCH_serve.json so future PRs have a throughput trajectory:
+
+  PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import slots
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.splitbrain_engine import traffic_model_for
+
+
+def _workload(cfg, n_requests: int, max_new: int, mean_gap_s: float,
+              seed: int = 0) -> List[Request]:
+    """Poisson arrivals, prompt lengths uniform in [2, 16]."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_gap_s, n_requests)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    return [
+        Request(uid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    (int(rng.integers(2, 17)),)
+                                    ).astype(np.int32),
+                max_new=max_new,
+                arrival_s=float(arrivals[i]))
+        for i in range(n_requests)
+    ]
+
+
+def _run_sequential(eng: ServeEngine, reqs: List[Request]) -> Dict[str, Any]:
+    """One at a time, in arrival order, each request fully fused."""
+    t_start = time.perf_counter()
+    latency, decoded = [], 0
+    for r in sorted(reqs, key=lambda r: (r.arrival_s, r.uid)):
+        now = time.perf_counter() - t_start
+        if now < r.arrival_s:
+            time.sleep(r.arrival_s - now)
+            now = r.arrival_s
+        out = eng.generate(r.prompt[None, :], max_new=r.max_new)
+        decoded += int(out["gen_len"].sum())
+        latency.append(time.perf_counter() - t_start - r.arrival_s)
+    wall = time.perf_counter() - t_start
+    return {"wall_s": wall, "decoded_tokens": decoded,
+            "tokens_per_s": decoded / wall,
+            "requests_per_s": len(reqs) / wall,
+            "mean_latency_s": float(np.mean(latency))}
+
+
+def _run_continuous(eng: ServeEngine, reqs: List[Request],
+                    max_slots: int) -> Dict[str, Any]:
+    sched = ContinuousBatchingScheduler(eng, max_slots=max_slots)
+    out = sched.run(list(reqs), realtime=True)
+    lat = [res.finished_s - req.arrival_s
+           for res, req in zip(out["results"],
+                               sorted(reqs, key=lambda r: r.uid))]
+    return {"wall_s": out["wall_s"],
+            "decoded_tokens": out["decoded_tokens"],
+            "tokens_per_s": out["tokens_per_s"],
+            "requests_per_s": out["requests_per_s"],
+            "mean_latency_s": float(np.mean(lat)),
+            "steps": out["steps"]}
+
+
+def bench_arch(arch: str, n_requests: int, max_new: int, max_slots: int,
+               mean_gap_s: float, overrides: Dict[str, Any]) -> Dict[str, Any]:
+    cfg = get_config(arch).reduced(**overrides)
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=16 + max_new + 1)
+    reqs = _workload(cfg, n_requests, max_new, mean_gap_s)
+
+    # warm every bucket both disciplines touch (compiles excluded from timing)
+    warm = [Request(uid=-1 - i, prompt=r.prompt, max_new=r.max_new)
+            for i, r in enumerate(reqs)]
+    _run_sequential(eng, [dataclasses.replace(w, arrival_s=0.0) for w in warm])
+    ContinuousBatchingScheduler(eng, max_slots=max_slots).run(
+        [dataclasses.replace(w, arrival_s=0.0) for w in warm])
+
+    counter = slots.CompileCounter.instance()
+    seq = _run_sequential(eng, reqs)
+    c0 = counter.count
+    eng.meter.reset()
+    cont = _run_continuous(eng, reqs, max_slots)
+    steady_recompiles = counter.count - c0
+
+    n_tok = sum(len(r.prompt) - 1 + r.max_new for r in reqs)
+    analytic = n_tok * traffic_model_for(cfg).bytes_per_token()
+    measured = eng.measured_bytes()["total"]
+
+    return {
+        "config": cfg.name,
+        "n_requests": n_requests,
+        "max_new": max_new,
+        "max_slots": max_slots,
+        "mean_gap_s": mean_gap_s,
+        "sequential": seq,
+        "continuous": cont,
+        "requests_per_s_speedup": cont["requests_per_s"] / seq["requests_per_s"],
+        "tokens_per_s_speedup": cont["tokens_per_s"] / seq["tokens_per_s"],
+        "steady_state_recompiles": steady_recompiles,
+        "compile_counter_available": counter.available,
+        "traffic_measured_bytes": measured,
+        "traffic_analytical_bytes": analytic,
+        "traffic_exact": measured == analytic,
+        "jit_caches": eng.jit_cache_sizes(),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload, >=1x gate (CI smoke)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--mean-gap-ms", type=float, default=2.0,
+                    help="mean Poisson inter-arrival gap (saturating default)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    n_requests = args.requests or (8 if args.quick else 32)
+    max_new = args.max_new or (8 if args.quick else 32)
+    # d_model=128 keeps the reduced model decode GEMV-bound enough that
+    # batching the slots is a real win, CPU or not
+    overrides = dict(vocab_size=256, d_model=128, d_ff=384)
+    archs = ["llama2-7b"] if args.quick else ["llama2-7b", "rwkv6-7b"]
+
+    results = [bench_arch(a, n_requests, max_new, args.slots,
+                          args.mean_gap_ms / 1e3, overrides) for a in archs]
+
+    gate = 1.0 if args.quick else 2.0
+    summary = {
+        r["config"]: {
+            "requests_per_s_speedup": round(r["requests_per_s_speedup"], 2),
+            "tokens_per_s_speedup": round(r["tokens_per_s_speedup"], 2),
+            "zero_steady_state_recompiles": r["steady_state_recompiles"] == 0,
+            "traffic_exact": r["traffic_exact"],
+        } for r in results
+    }
+    report = {
+        "schema": "serve_bench/v1",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "quick": args.quick,
+        "gate_requests_per_s_speedup": gate,
+        "results": results,
+        "summary": summary,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(json.dumps(summary, indent=2))
+    print(f"wrote {args.out}")
+
+    ok = all(r["requests_per_s_speedup"] >= gate
+             and r["steady_state_recompiles"] == 0
+             and r["traffic_exact"] for r in results)
+    if not ok:
+        print(f"FAIL: continuous < {gate}x sequential requests/s, steady-state"
+              " recompile, or traffic mismatch", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -112,6 +112,20 @@ class TrafficModel:
         """The paper's reference config (32L, d=4096, MHA, 32K vocab)."""
         return TrafficModel(num_layers=32, d_model=4096, kv_dim=4096, vocab_size=32000)
 
+    @classmethod
+    def for_config(cls, cfg) -> "TrafficModel":
+        """Traffic model for any backbone config (eq. 7-10 abstraction).
+
+        ``kv_dim`` is the per-layer dynamic-state projection width the device
+        ships to the host each token: K/V for attention families, the
+        K/V-equivalent recurrence inputs for attention-free blocks (both are
+        ``num_kv_heads * head_dim`` wide in our configs).  This is the single
+        accounting rule the serving engines and the continuous-batching
+        scheduler replay per *active* token (DESIGN.md §4).
+        """
+        return cls(num_layers=cfg.num_layers, d_model=cfg.d_model,
+                   kv_dim=cfg.kv_dim, vocab_size=cfg.vocab_size)
+
 
 class TrafficMeter:
     """Runtime byte counter for tensors crossing the host/device boundary."""
@@ -138,6 +152,24 @@ class TrafficMeter:
     @property
     def total(self) -> int:
         return self.device_to_host + self.host_to_device
+
+    def measured_bytes(self, count_q: bool = False) -> Dict[str, int]:
+        """Summed boundary bytes under the paper's accounting.
+
+        Eq. 7-10 count K/V out, attention in, logits out; the engines
+        additionally log the QKV input activation under the name
+        ``x_qkv_in``, which ``count_q=False`` (the paper's rule) excludes.
+        The single accounting filter both serving engines share.
+        """
+        d2h = h2d = 0
+        for direction, name, nbytes in self.log:
+            if not count_q and name == "x_qkv_in":
+                continue
+            if direction == "d2h":
+                d2h += nbytes
+            else:
+                h2d += nbytes
+        return {"d2h": d2h, "h2d": h2d, "total": d2h + h2d}
 
     def reset(self) -> None:
         self.device_to_host = 0

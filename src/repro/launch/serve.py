@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b --smoke \
       --batch 4 --prompt-len 8 --max-new 16
+
+  # continuous batching: N concurrent requests over a slot-based KV cache
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --requests 8 --slots 4 --max-new 16
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import api
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 
 
 def main(argv=None):
@@ -25,7 +30,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve --requests ragged prompts via the "
+                         "slot-based continuous-batching scheduler")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -35,6 +46,33 @@ def main(argv=None):
         cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
     params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
+
+    if args.continuous:
+        eng = ServeEngine(cfg, params,
+                          max_len=args.prompt_len + args.max_new + 1)
+        lo = min(2, args.prompt_len)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(
+                            1, cfg.vocab_size,
+                            (int(rng.integers(lo, args.prompt_len + 1)),)
+                        ).astype(np.int32),
+                        max_new=args.max_new)
+                for i in range(args.requests)]
+        sched = ContinuousBatchingScheduler(eng, max_slots=args.slots,
+                                            eos_id=args.eos_id)
+        out = sched.run(reqs)
+        print(json.dumps({
+            "arch": cfg.name,
+            "requests": args.requests,
+            "slots": args.slots,
+            "steps": out["steps"],
+            "decoded_tokens": out["decoded_tokens"],
+            "tokens_per_s": round(out["tokens_per_s"], 2),
+            "requests_per_s": round(out["requests_per_s"], 2),
+            "gen_len": [r.gen_len for r in out["results"]],
+        }))
+        return out
+
     prompts = rng.integers(1, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
     frontend = (jnp.asarray(rng.standard_normal(
@@ -43,11 +81,13 @@ def main(argv=None):
 
     eng = ServeEngine(cfg, params,
                       max_len=args.prompt_len + args.max_new + 1)
-    out = eng.generate(prompts, max_new=args.max_new, frontend=frontend)
+    out = eng.generate(prompts, max_new=args.max_new, frontend=frontend,
+                       eos_id=args.eos_id)
     print(json.dumps({
         "arch": cfg.name,
         "batch": args.batch,
         "generated": out["tokens"][:2, :8].tolist(),
+        "gen_len": out["gen_len"].tolist(),
         "tokens_per_s": round(out["tokens_per_s"], 2),
     }))
     return out

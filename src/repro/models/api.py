@@ -76,6 +76,41 @@ def prefill(params, cache, tokens, cfg: ModelConfig):
     return logits[-1], cache
 
 
+def prefill_bucketed(params, cache, tokens, true_len, cfg: ModelConfig):
+    """Prefill a right-padded prompt: only the first ``true_len`` of the
+    ``tokens`` width are real; the rest is bucket padding.
+
+    tokens (B, Tb) with Tb a power-of-two bucket, true_len a (traced) scalar
+    -> (logits at position true_len - 1, cache with len += true_len).  One
+    compiled program per bucket width, reused by every prompt length that
+    rounds up to it — the serve-path jit caches stay O(log max_len).
+
+    The lm family takes the fused block-prefill fast path (garbage K/V past
+    ``true_len`` is provably unreachable — see models/transformer.py); every
+    other family scans ``decode_step`` with the state update *masked* past
+    ``true_len``, so recurrent state (rwkv WKV, hymba SSM) is never touched
+    by padding tokens.
+    """
+    mod = family_module(cfg)
+    Tb = tokens.shape[1]
+    true_len = jnp.asarray(true_len, jnp.int32)
+    if hasattr(mod, "prefill") and _prefill_fits(cache, Tb):
+        return mod.prefill(params, cache, tokens, cfg, true_len=true_len)
+
+    def body(c, xt):
+        tok, t = xt
+        logits, c_new = mod.decode_step(params, c, tok, cfg)
+        keep = t < true_len
+        c = jax.tree.map(lambda new, old: jnp.where(keep, new, old), c_new, c)
+        return c, logits
+
+    steps = jnp.arange(Tb, dtype=jnp.int32)
+    cache, logits = jax.lax.scan(body, cache, (tokens.T, steps))
+    last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=0,
+                                        keepdims=False)
+    return last, cache
+
+
 def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
             aux_weight: float = 0.01):
     """Next-token cross-entropy (+ MoE load-balance aux)."""

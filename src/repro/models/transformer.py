@@ -238,7 +238,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-def prefill(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
+def prefill(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
+            true_len: Optional[jnp.ndarray] = None):
     """Fill a FRESH KV cache with a whole prompt in one forward-style pass.
 
     tokens (B, T) -> (last-position logits (B, V), cache with len = T).
@@ -246,6 +247,14 @@ def prefill(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
     prompt, block-write into the cache, causal self-attention over the
     prompt.  Requires every cache slot to hold T tokens (``api.prefill``
     falls back to a scanned decode otherwise) and an empty cache.
+
+    ``true_len`` (traced scalar, serve-path shape bucketing): tokens is
+    right-padded to a bucket width and only the first ``true_len`` positions
+    are real.  Logits are taken at position ``true_len - 1`` and ``len`` is
+    advanced by ``true_len``.  The K/V written past ``true_len`` are garbage
+    but unreachable: causal attention masks them during prefill, decode
+    attends only to ``len`` positions, and each subsequent decode step
+    overwrites slot ``len`` before attending to it (DESIGN.md §4).
     """
     n_groups, group_size = group_layout(cfg)
     P = len(cfg.layer_pattern)
@@ -290,13 +299,21 @@ def prefill(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
     x, upd = jax.lax.scan(group_fn, x, xs)
 
     x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    if true_len is None:
+        x_last = x[:, -1]
+        advance = T
+    else:
+        B = tokens.shape[0]
+        idx = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32) - 1, (B,))
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        advance = jnp.asarray(true_len, jnp.int32)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = L.linear(x[:, -1], head).astype(jnp.float32)
+    logits = L.linear(x_last, head).astype(jnp.float32)
     if cfg.final_softcap:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
-    new_cache["len"] = cache["len"] + T
+    new_cache["len"] = cache["len"] + advance
     return logits, new_cache
 
 

@@ -6,24 +6,39 @@ mesh is the production mesh; on CPU it serves reduced configs for tests and
 examples.
 
 The default (``fused=True``) path compiles the whole request into two
-programs: one ``api.prefill`` call that fills the KV cache with the entire
-prompt, and one ``lax.scan``-fused decode loop that emits every generated
-token in a single dispatch (DESIGN.md §1).  ``fused=False`` keeps the
-original one-dispatch-per-token reference loop for parity testing.
+programs: one bucketed ``api.prefill_bucketed`` call that fills the KV cache
+with the entire prompt, and one ``lax.scan``-fused decode loop that emits
+every generated token in a single dispatch (DESIGN.md §1).  ``fused=False``
+keeps the original one-dispatch-per-token reference loop for parity testing.
+
+Every compiled shape is bucketed to a power of two (prompt width, decode
+steps, batch), so the jit caches stay O(log max_len) no matter how ragged
+the request mix is.  ``eos_id`` enables per-request stop tokens with exact
+generated-length reporting.
+
+For the continuous-batching scheduler (serve/scheduler.py) the engine also
+exposes the slot protocol: ``init_slot_cache`` / ``prefill_slot`` /
+``insert_slot`` / ``decode_slots`` — a fixed ``(max_slots, ...)`` cache
+pytree where each slot is an independent request stream, admitted mid-flight
+by a bucketed B=1 prefill and advanced by ONE persistent masked decode step.
+Interface-traffic accounting (``meter``) replays eq. 7-10 bytes per *active*
+token (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.splitbrain import TrafficMeter, TrafficModel
 from repro.launch.mesh import make_test_mesh
 from repro.models import api
+from repro.serve import slots as slots_mod
 from repro.train import step as step_mod
 
 
@@ -35,63 +50,148 @@ class ServeEngine:
         self.mesh = mesh if mesh is not None else make_test_mesh()
         self.max_len = max_len
         self.fused = fused
+        self.meter = TrafficMeter()
+        self._traffic = TrafficModel.for_config(cfg)
+        # slot decode runs requests at ragged positions: the lockstep
+        # scalar-index cache write (Perf H2) is wrong there, so the slot
+        # programs compile against this variant of the config.
+        self._ragged_cfg = dataclasses.replace(
+            cfg, parallel=dataclasses.replace(cfg.parallel,
+                                              aligned_decode=False))
         self._serve_step = None
-        self._prefill_jit: Dict[int, Any] = {}   # keyed by prompt_len
-        self._loop_jit: Dict[int, Any] = {}      # keyed by steps
+        self._prefill_jit: Dict[int, Any] = {}         # keyed by bucket width
+        self._loop_jit: Dict[Tuple[int, Optional[int]], Any] = {}
+        self._slot_step_jit: Dict[int, Any] = {}       # keyed by n_slots
+        self._slot_insert = None
+        self._axes = None
 
+    # -------------------------------------------------------- jitted programs
     def _get_serve_step(self, cache):
         if self._serve_step is None:
             self._serve_step = step_mod.make_serve_step(
                 self.cfg, self.mesh, self.params, cache, donate=False)
         return self._serve_step
 
-    def _get_prefill(self, cache, prompt_len: int):
-        if prompt_len not in self._prefill_jit:
-            self._prefill_jit[prompt_len] = step_mod.make_cache_prefill(
+    def _get_prefill(self, cache, width: int):
+        """Bucketed prefill program; ``width`` must be a power-of-two bucket.
+        One entry per bucket -> O(log max_len) compiles total."""
+        if width not in self._prefill_jit:
+            self._prefill_jit[width] = step_mod.make_bucketed_prefill(
                 self.cfg, self.mesh, self.params, cache)
-        return self._prefill_jit[prompt_len]
+        return self._prefill_jit[width]
 
-    def _get_decode_loop(self, cache, steps: int):
-        if steps not in self._loop_jit:
-            self._loop_jit[steps] = step_mod.make_decode_loop(
-                self.cfg, self.mesh, self.params, cache, steps)
-        return self._loop_jit[steps]
+    def _get_decode_loop(self, cache, steps: int, eos_id: Optional[int]):
+        key = (steps, eos_id)
+        if key not in self._loop_jit:
+            self._loop_jit[key] = step_mod.make_decode_loop(
+                self.cfg, self.mesh, self.params, cache, steps, eos_id=eos_id)
+        return self._loop_jit[key]
 
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-program census (bench/test introspection)."""
+        return {
+            "prefill_buckets": len(self._prefill_jit),
+            "loop_buckets": len(self._loop_jit),
+            "slot_steps": len(self._slot_step_jit),
+        }
+
+    # ----------------------------------------------------- traffic accounting
+    def meter_tokens(self, n: int) -> None:
+        """Replay ``n`` active tokens' boundary crossings on the meter.
+
+        Aggregate form of the split-brain per-token log (same names, same
+        eq. 7-10 widths, bytes == n * TrafficModel.bytes_per_token()); the
+        accounting rule for masked decode is that ONLY active slots cross
+        the interface (DESIGN.md §4).
+        """
+        n = int(n)
+        if n <= 0:
+            return
+        tm = self._traffic
+        self.meter.h2d("x_qkv_in", (n, tm.num_layers, tm.d_model))
+        self.meter.d2h("kv_out", (n, tm.num_layers, 2, tm.kv_dim))
+        self.meter.h2d("attn_in", (n, tm.num_layers, tm.d_model))
+        self.meter.d2h("logits", (n, tm.vocab_size))
+
+    def measured_bytes(self, count_q: bool = False) -> Dict[str, int]:
+        """Total metered boundary bytes (paper accounting: K/V + attention +
+        logits; ``count_q=True`` adds the QKV input activations)."""
+        return self.meter.measured_bytes(count_q)
+
+    # --------------------------------------------------------------- generate
     def generate(self, prompts: np.ndarray, max_new: int = 16,
                  frontend: Optional[jnp.ndarray] = None,
-                 fused: Optional[bool] = None) -> Dict[str, Any]:
-        """Greedy-decode a batch. prompts: (B, T0) int32 (right-aligned)."""
+                 fused: Optional[bool] = None,
+                 eos_id: Optional[int] = None) -> Dict[str, Any]:
+        """Greedy-decode a batch. prompts: (B, T0) int32 (right-aligned).
+
+        ``eos_id``: per-request stop token.  Output rows are padded with
+        ``eos_id`` past each request's stop, and ``gen_len`` reports the
+        exact generated length (EOS inclusive, capped at ``max_new``).
+        """
         if fused is None:
             fused = self.fused
         cfg = self.cfg
         B, T0 = prompts.shape
         with self.mesh:
-            cache = api.init_cache(cfg, B, self.max_len, frontend=frontend,
-                                   params=self.params)
             if not fused:
-                return self._generate_stepwise(cache, prompts, max_new)
+                cache = api.init_cache(cfg, B, self.max_len, frontend=frontend,
+                                       params=self.params)
+                return self._generate_stepwise(cache, prompts, max_new, eos_id)
+            # bucket the batch too: pad with copies of row 0, slice outputs
+            Bb = slots_mod.bucket(B)
             prompts_j = jnp.asarray(prompts, jnp.int32)
+            if Bb > B:
+                prompts_j = jnp.concatenate(
+                    [prompts_j, jnp.broadcast_to(prompts_j[:1],
+                                                 (Bb - B, T0))], axis=0)
+                if frontend is not None:
+                    frontend = jnp.concatenate(
+                        [frontend, jnp.broadcast_to(
+                            frontend[:1], (Bb - B,) + frontend.shape[1:])],
+                        axis=0)
+            cache = api.init_cache(cfg, Bb, self.max_len, frontend=frontend,
+                                   params=self.params)
             tok = prompts_j[:, -1]
             tp0 = time.perf_counter()
             if T0 > 1:
-                # one fused api.forward-style pass fills the cache with the
-                # whole prompt (no T0 Python-loop decode steps)
-                prefill = self._get_prefill(cache, T0 - 1)
-                _, cache = prefill(self.params, cache, prompts_j[:, :-1])
+                # one bucketed api.prefill_bucketed pass fills the cache with
+                # the whole prompt (no T0 Python-loop decode steps)
+                width = slots_mod.bucket(T0 - 1)
+                body = prompts_j[:, :-1]
+                if width > T0 - 1:
+                    body = jnp.pad(body, ((0, 0), (0, width - (T0 - 1))))
+                prefill = self._get_prefill(cache, width)
+                _, cache = prefill(self.params, cache, body,
+                                   np.int32(T0 - 1))
             prefill_s = time.perf_counter() - tp0
-            loop = self._get_decode_loop(cache, max_new)
+            # bucketed step count: run the bucket, slice to max_new (greedy
+            # decode is prefix-stable, so the extra steps change nothing)
+            steps = slots_mod.bucket(max_new)
+            loop = self._get_decode_loop(cache, steps, eos_id)
             t0 = time.perf_counter()
-            toks, _, cache = loop(self.params, cache, tok)
+            toks, _, cache, gen_len = loop(self.params, cache, tok)
             toks = jax.block_until_ready(toks)
             dt = time.perf_counter() - t0
-        return {"tokens": np.asarray(toks),
-                "tokens_per_s": B * max_new / dt,
+        toks = np.asarray(toks)[:B, :max_new]
+        gen_len = np.minimum(np.asarray(gen_len)[:B], max_new)
+        self.meter_tokens(B * (T0 - 1) + int(gen_len.sum()))
+        return {"tokens": toks,
+                "gen_len": gen_len,
+                "tokens_per_s": int(gen_len.sum()) / dt,
                 "decode_s": dt,
                 "prefill_s": prefill_s}
 
-    def _generate_stepwise(self, cache, prompts: np.ndarray, max_new: int):
-        """Reference loop: one jitted dispatch per token (prefill included)."""
+    def _generate_stepwise(self, cache, prompts: np.ndarray, max_new: int,
+                           eos_id: Optional[int] = None):
+        """Reference loop: one jitted dispatch per token (prefill included).
+
+        EOS semantics mirror the fused loop exactly: finished rows keep
+        stepping in lockstep but emit (and are fed) ``eos_id``; the loop may
+        break early once every row has stopped, padding the remainder.
+        """
         step = self._get_serve_step(cache)
+        B = prompts.shape[0]
         tok = jnp.asarray(prompts[:, 0], jnp.int32)
         tp0 = time.perf_counter()
         for t in range(1, prompts.shape[1]):
@@ -99,13 +199,88 @@ class ServeEngine:
             tok = jnp.asarray(prompts[:, t], jnp.int32)
         prefill_s = time.perf_counter() - tp0
         out = []
+        alive = np.ones((B,), bool)
+        gen_len = np.zeros((B,), np.int32)
         t0 = time.perf_counter()
         for _ in range(max_new):
             tok, logits, cache = step(self.params, cache, tok)
-            out.append(np.asarray(tok))
+            emitted = np.asarray(tok)
+            gen_len += alive
+            if eos_id is not None:
+                emitted = np.where(alive, emitted, eos_id)
+                alive &= emitted != eos_id
+                tok = jnp.asarray(emitted, jnp.int32)
+            out.append(emitted)
+            if eos_id is not None and not alive.any():
+                break
         dt = time.perf_counter() - t0
+        while len(out) < max_new:
+            out.append(np.full((B,), eos_id, np.int32))
         tokens = np.stack(out, axis=1)
+        self.meter_tokens(B * (prompts.shape[1] - 1) + int(gen_len.sum()))
         return {"tokens": tokens,
-                "tokens_per_s": tokens.shape[0] * max_new / dt,
+                "gen_len": gen_len,
+                "tokens_per_s": int(gen_len.sum()) / dt,
                 "decode_s": dt,
                 "prefill_s": prefill_s}
+
+    # ---------------------------------------------------------- slot protocol
+    # Consumed by serve/scheduler.py: a fixed (max_slots, ...) cache pytree
+    # where every slot is an independent request stream.
+    def _slot_axes(self):
+        if self._axes is None:
+            a = jax.eval_shape(lambda: api.init_cache(self.cfg, 1, self.max_len))
+            b = jax.eval_shape(lambda: api.init_cache(self.cfg, 2, self.max_len))
+            self._axes = slots_mod.batch_axes(a, b)
+        return self._axes
+
+    def init_slot_cache(self, n_slots: int):
+        """Fixed-shape batched cache, one slot per concurrent stream."""
+        assert not self.cfg.frontend_tokens and not self.cfg.cross_attn_every, \
+            "continuous batching covers the text-only families"
+        with self.mesh:
+            return api.init_cache(self.cfg, n_slots, self.max_len)
+
+    def prefill_slot(self, prompt: np.ndarray):
+        """Prefill ONE request into a fresh B=1 cache (bucketed width).
+
+        prompt (T0,) -> (single-request cache, input token for the next
+        decode step).  The returned cache is slot-shaped: insert_slot writes
+        it into the batched cache without reshaping.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        T0 = prompt.shape[0]
+        assert T0 >= 1
+        with self.mesh:
+            cache = api.init_cache(self.cfg, 1, self.max_len)
+            if T0 > 1:
+                width = slots_mod.bucket(T0 - 1)
+                body = np.zeros((1, width), np.int32)
+                body[0, :T0 - 1] = prompt[:-1]
+                prefill = self._get_prefill(cache, width)
+                _, cache = prefill(self.params, cache, jnp.asarray(body),
+                                   np.int32(T0 - 1))
+        return cache, int(prompt[-1])
+
+    def insert_slot(self, batched_cache, slot_cache, slot: int):
+        """Write a prefilled request into slot ``slot`` (donated, traced
+        index: ONE compiled program covers every slot)."""
+        if self._slot_insert is None:
+            self._slot_insert = slots_mod.make_slot_insert(self._slot_axes())
+        with self.mesh:
+            return self._slot_insert(batched_cache, slot_cache,
+                                     jnp.int32(slot))
+
+    def decode_slots(self, cache, tokens, active):
+        """One masked batched decode step: every slot computes, only active
+        slots advance (inactive cache leaves frozen).  Fixed shapes — the
+        steady-state loop re-dispatches one compiled program forever."""
+        n = int(tokens.shape[0])
+        if n not in self._slot_step_jit:
+            self._slot_step_jit[n] = step_mod.make_slot_step(
+                self._ragged_cfg, self.mesh, self.params, cache,
+                self._slot_axes())
+        with self.mesh:
+            return self._slot_step_jit[n](
+                self.params, cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(active, bool))

@@ -1,0 +1,170 @@
+"""Continuous-batching serve loop: slot-based KV cache, zero-recompile
+steady state.
+
+The paper's Split-Brain protocol (§IV-B) makes the ITA device stateless so
+the host can multiplex many streams over one immutable datapath; this module
+is that host.  It keeps ONE persistent jitted batched decode step alive and
+feeds it from a fixed ``(max_slots, ...)`` slot cache:
+
+  admit ──> bucketed B=1 prefill ──> insert_slot (donated, traced index)
+    │                                         │
+    └── free slot <── EOS / max_new <── masked batched decode (1 dispatch
+                                            per token for ALL active slots)
+
+Slot lifecycle (DESIGN.md §4): a finished request frees its slot in place —
+no reallocation, no shape change — and the next pending request is prefilled
+into it mid-flight while the other slots keep decoding.  Every compiled
+shape is a power-of-two bucket (serve/slots.py), so after warmup the steady
+state dispatches exactly one fixed-shape program per token and NEVER
+recompiles (asserted with a compile counter in benchmarks/serve_bench.py).
+
+Works with any engine exposing the slot protocol (``init_slot_cache`` /
+``prefill_slot`` / ``insert_slot`` / ``decode_slots`` / ``meter_tokens``):
+serve/engine.py (all text families) and serve/splitbrain_engine.py (the
+paper's LM configs).  TrafficMeter accounting stays byte-exact per *active*
+token: a request admitted at T0 and stopped after g tokens crosses the
+boundary exactly (T0 - 1 + g) times, the same count the fused one-request
+``generate()`` replays — that equality is a test (tests/test_scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["Request", "RequestResult", "ContinuousBatchingScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (T0,) int32
+    max_new: int = 16
+    arrival_s: float = 0.0        # offset from serve-loop start
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray            # (gen_len,) int32 — exactly what was generated
+    gen_len: int
+    prompt_len: int
+    admitted_s: float
+    finished_s: float
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    tokens: List[int]
+    admitted_s: float
+
+
+class ContinuousBatchingScheduler:
+    """Slot-based continuous batching over one persistent decode program.
+
+    ``realtime=True`` honours ``Request.arrival_s`` against the wall clock
+    (Poisson-arrival benchmarking); ``realtime=False`` treats arrivals as an
+    admission ORDER only and admits as fast as slots free up (deterministic,
+    used by the parity tests).
+    """
+
+    def __init__(self, engine, max_slots: int = 8,
+                 eos_id: Optional[int] = None):
+        self.engine = engine
+        self.max_slots = int(max_slots)
+        self.eos_id = eos_id
+        self.cache = None
+
+    def warmup(self, prompt_len: int = 4, max_new: int = 2) -> None:
+        """Compile the steady-state programs (prefill bucket, insert, slot
+        step) before timing starts; leaves the TrafficMeter untouched."""
+        prompt = np.ones((prompt_len,), np.int32)
+        req = Request(uid=-1, prompt=prompt, max_new=max_new)
+        self.run([req])
+        self.engine.meter.reset()
+
+    def run(self, requests: List[Request],
+            realtime: bool = False) -> Dict[str, Any]:
+        """Serve every request to completion; returns results + loop stats."""
+        eng = self.engine
+        n_slots = self.max_slots
+        for r in requests:
+            assert len(r.prompt) - 1 + r.max_new <= eng.max_len, \
+                (r.uid, len(r.prompt), r.max_new, eng.max_len)
+        pending = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        cache = eng.init_slot_cache(n_slots)
+        tokens = np.zeros((n_slots,), np.int32)
+        active = np.zeros((n_slots,), bool)
+        states: Dict[int, _SlotState] = {}
+        free = list(range(n_slots - 1, -1, -1))
+        results: List[RequestResult] = []
+        steps = 0
+        decoded_tokens = 0
+        prefill_tokens = 0
+        t_start = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t_start
+
+        while pending or active.any():
+            # ---- admit: prefill new requests into free slots mid-flight
+            while free and pending and (not realtime
+                                        or pending[0].arrival_s <= now()):
+                req = pending.popleft()
+                slot = free.pop()
+                slot_cache, tok = eng.prefill_slot(req.prompt)
+                cache = eng.insert_slot(cache, slot_cache, slot)
+                prefill_tokens += len(req.prompt) - 1
+                tokens[slot] = tok
+                active[slot] = True
+                states[slot] = _SlotState(req, [], now())
+            if not active.any():
+                if realtime and pending:
+                    time.sleep(max(0.0, pending[0].arrival_s - now()))
+                continue
+            # ---- one masked batched decode step for every active stream
+            n_active = int(active.sum())
+            nxt, cache = eng.decode_slots(cache, tokens, active)
+            steps += 1
+            decoded_tokens += n_active
+            nxt = np.asarray(nxt)
+            for slot in np.flatnonzero(active):
+                st = states[slot]
+                tok = int(nxt[slot])
+                st.tokens.append(tok)
+                done = (len(st.tokens) >= st.req.max_new
+                        or (self.eos_id is not None and tok == self.eos_id))
+                if done:
+                    results.append(RequestResult(
+                        uid=st.req.uid,
+                        tokens=np.asarray(st.tokens, np.int32),
+                        gen_len=len(st.tokens),
+                        prompt_len=len(st.req.prompt),
+                        admitted_s=st.admitted_s,
+                        finished_s=now()))
+                    active[slot] = False
+                    free.append(slot)
+                    del states[slot]
+                else:
+                    tokens[slot] = tok
+
+        wall_s = now()
+        # Boundary accounting, replayed ONCE per run so the steady-state
+        # loop's meter log stays O(1): only active slots ever cross, so the
+        # total is exactly sum over requests of (T0 - 1 + gen) tokens —
+        # byte-identical to per-step replay (crossings are linear in count).
+        eng.meter_tokens(prefill_tokens + decoded_tokens)
+        self.cache = cache
+        results.sort(key=lambda r: r.uid)
+        return {
+            "results": results,
+            "steps": steps,
+            "decoded_tokens": decoded_tokens,
+            "wall_s": wall_s,
+            "tokens_per_s": decoded_tokens / wall_s if wall_s else 0.0,
+            "requests_per_s": len(results) / wall_s if wall_s else 0.0,
+        }

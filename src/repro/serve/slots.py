@@ -1,0 +1,122 @@
+"""Slot-cache plumbing for the continuous-batching serve loop.
+
+A *slot cache* is an ordinary family cache pytree built for
+``batch = max_slots``: every slot is one independent request stream at its
+own position (ragged ``len``).  The helpers here are family-agnostic — they
+never assume where the batch dimension lives.  Instead ``batch_axes``
+*discovers* it per leaf by diffing the shapes of two caches built with
+different batch sizes (the batch axis is the only axis that can change), so
+lm's ``(n_groups, gs, B, Hkv, S, hd)`` lists, rwkv's ``(L, B, H, hd, hd)``
+state and hymba's mixed KV+SSM caches all work through the same two
+primitives:
+
+  * ``make_slot_insert`` — write a freshly prefilled single-request cache
+    into slot ``i`` of the batched cache (one jitted dispatch, donated
+    batched buffers, traced slot index: compiles ONCE).
+  * ``select_slots`` — per-leaf ``where`` keyed on the active mask, used by
+    the masked decode step to freeze finished/free slots.
+
+Also home to the power-of-two shape bucketing used to bound every serve-path
+jit cache, and a process-wide XLA compile counter (the zero-recompile
+steady-state assertion in ``benchmarks/serve_bench.py`` is measured, not
+assumed).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bucket", "batch_axes", "select_slots", "make_slot_insert",
+           "CompileCounter"]
+
+
+def bucket(n: int, floor: int = 1) -> int:
+    """Round ``n`` up to the next power of two (>= floor).
+
+    Every serve-path compile key (prompt width, decode steps, batch) is
+    bucketed through here, so the number of distinct compiled programs is
+    O(log max_len) instead of O(#distinct request shapes).
+    """
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
+
+
+def batch_axes(cache_a: Any, cache_b: Any) -> Any:
+    """Per-leaf batch-axis pytree, discovered by shape diffing.
+
+    ``cache_a``/``cache_b`` are the same family cache built with two
+    different batch sizes (ShapeDtypeStructs from ``jax.eval_shape`` are
+    fine — no allocation needed).  Exactly one axis per leaf may differ.
+    """
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        assert len(diffs) == 1, \
+            f"cannot locate batch axis: {a.shape} vs {b.shape}"
+        return diffs[0]
+
+    return jax.tree.map(axis, cache_a, cache_b)
+
+
+def _mask_for(active: jnp.ndarray, axis: int, ndim: int) -> jnp.ndarray:
+    """Reshape the (n_slots,) mask to broadcast along ``axis`` of a leaf."""
+    shape = [1] * ndim
+    shape[axis] = active.shape[0]
+    return active.reshape(shape)
+
+
+def select_slots(active: jnp.ndarray, new: Any, old: Any, axes: Any) -> Any:
+    """new where the slot is active, old where it is not — per leaf, along
+    that leaf's own batch axis.  Traceable."""
+    return jax.tree.map(
+        lambda n, o, ax: jnp.where(_mask_for(active, ax, n.ndim), n, o),
+        new, old, axes)
+
+
+def make_slot_insert(axes: Any):
+    """Jitted ``insert(batched_cache, single_cache, slot) -> batched_cache``.
+
+    Writes every leaf of a batch-1 cache into position ``slot`` of the
+    batched cache along the leaf's batch axis.  ``slot`` is a traced scalar,
+    so admission into any slot reuses ONE compiled program; the batched
+    buffers are donated (admission is in-place on the accelerator).
+    """
+    def insert(batched, single, slot):
+        return jax.tree.map(
+            lambda b, s, ax: jax.lax.dynamic_update_slice_in_dim(
+                b, s.astype(b.dtype), slot, axis=ax),
+            batched, single, axes)
+
+    return jax.jit(insert, donate_argnums=(0,))
+
+
+class CompileCounter:
+    """Process-wide XLA backend-compile counter via ``jax.monitoring``.
+
+    Usage: ``c0 = CompileCounter.instance().count`` ... run steady state ...
+    ``recompiles = CompileCounter.instance().count - c0``.  Falls back to
+    ``available=False`` (count stays 0) if the monitoring API moved.
+    """
+
+    _instance = None
+    _EVENT = "/jax/core/compile/backend_compile_duration"
+
+    def __init__(self) -> None:
+        self.count = 0
+        try:
+            from jax import monitoring
+            monitoring.register_event_duration_secs_listener(self._on_event)
+            self.available = True
+        except Exception:
+            self.available = False
+
+    def _on_event(self, key: str, duration: float, **_) -> None:
+        if key == self._EVENT:
+            self.count += 1
+
+    @classmethod
+    def instance(cls) -> "CompileCounter":
+        if cls._instance is None:
+            cls._instance = CompileCounter()
+        return cls._instance

@@ -43,15 +43,11 @@ from repro.core.splitbrain import TrafficMeter, TrafficModel
 from repro.kernels import ops
 from repro.models import api
 from repro.models import layers as L
+from repro.serve import slots as slots_mod
 
 
 def traffic_model_for(cfg: ModelConfig) -> TrafficModel:
-    return TrafficModel(
-        num_layers=cfg.num_layers,
-        d_model=cfg.d_model,
-        kv_dim=cfg.kv_dim,
-        vocab_size=cfg.vocab_size,
-    )
+    return TrafficModel.for_config(cfg)
 
 
 def _stack_layers(tree, num_layers: int):
@@ -101,7 +97,10 @@ class SplitBrainEngine:
         # Pre-computed per-token boundary-crossing byte counts (shapes are
         # static) for the trace-time meter replay; per batch element.
         self._decode_jit = jax.jit(self._token_step, donate_argnums=(1, 2))
-        self._generate_jit: Dict[Tuple[int, int], Any] = {}
+        self._generate_jit: Dict[Tuple[int, int, Any], Any] = {}
+        self._prefill_jit: Dict[int, Any] = {}   # keyed by bucket width
+        self._slot_step = None
+        self._slot_insert = None
 
     # ------------------------------------------------------------- device ops
     # The eager reference path: each helper registers its boundary crossing
@@ -197,25 +196,56 @@ class SplitBrainEngine:
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, logits, new_k, new_v, length + 1
 
-    def _generate_fn(self, T0: int, steps: int):
+    def _generate_fn(self, steps: int, max_out: int, eos_id: Optional[int]):
         """Build the fused multi-token loop: prompt forcing + greedy decode
-        inside one lax.scan — a single dispatch per generation."""
+        inside one lax.scan — a single dispatch per generation.
 
-        def gen(weights, k_cache, v_cache, length, prompts):
+        ``steps``/``max_out`` are power-of-two buckets; the actual prompt
+        length ``T0`` is a TRACED argument, so one compiled program serves
+        every prompt length in the bucket (the jit cache is O(log max_len)).
+        With ``eos_id``, a stream that emits the stop token stops counting
+        (``gen_len`` freezes, later outputs pad with ``eos_id``) while the
+        scan keeps lockstep — identical semantics to the serve engine loop.
+        """
+
+        def gen(weights, k_cache, v_cache, length, prompts, T0, total):
+            B = prompts.shape[0]
+            W = prompts.shape[1]
+
             def body(carry, t):
-                k, v, ln, tok = carry
-                nxt, _, k, v, ln = self._token_step(weights, k, v, ln, tok)
+                k, v, ln, tok, alive, n = carry
+                nxt, _, k2, v2, ln2 = self._token_step(weights, k, v, ln, tok)
+                # ``total`` = T0-1+max_new (traced): the bucket may run more
+                # scan steps than the request asked for, but the cache must
+                # come back in EXACTLY the prompt+max_new state (and never
+                # clamp-write past max_len), so the extras are frozen out.
+                run = t < total
+                k = jnp.where(run, k2, k)
+                v = jnp.where(run, v2, v)
+                ln = jnp.where(run, ln2, ln)
+                is_gen = (t >= T0 - 1) & run   # ys[T0-1:] = generated region
+                if eos_id is None:
+                    emitted = nxt
+                else:
+                    emitted = jnp.where(alive | ~is_gen, nxt,
+                                        jnp.int32(eos_id))
+                n = n + (is_gen & alive).astype(jnp.int32)
+                if eos_id is not None:
+                    alive = alive & ~(is_gen & (emitted == eos_id))
                 # teacher-force the remaining prompt tokens, then free-run
                 forced = jax.lax.dynamic_slice_in_dim(
-                    prompts, jnp.minimum(t + 1, T0 - 1), 1, axis=1)[:, 0]
-                tok = jnp.where(t + 1 < T0, forced, nxt)
-                return (k, v, ln, tok), nxt
+                    prompts, jnp.minimum(t + 1, W - 1), 1, axis=1)[:, 0]
+                tok = jnp.where(t + 1 < T0, forced, emitted)
+                return (k, v, ln, tok, alive, n), emitted
 
-            carry = (k_cache, v_cache, length, prompts[:, 0])
-            (k, v, ln, _), ys = jax.lax.scan(body, carry, jnp.arange(steps))
+            carry = (k_cache, v_cache, length, prompts[:, 0],
+                     jnp.ones((B,), bool), jnp.zeros((B,), jnp.int32))
+            (k, v, ln, _, _, n), ys = jax.lax.scan(body, carry,
+                                                   jnp.arange(steps))
             # ys[t] is the token produced after consuming input t; outputs
             # from step T0-1 onward are the generated continuation.
-            return ys[T0 - 1:].T, k, v, ln
+            toks = jax.lax.dynamic_slice_in_dim(ys.T, T0 - 1, max_out, axis=1)
+            return toks, k, v, ln, n
 
         return jax.jit(gen, donate_argnums=(1, 2))
 
@@ -275,7 +305,8 @@ class SplitBrainEngine:
         return next_tok, logits, {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
                                   "len": cache["len"] + 1}
 
-    def generate(self, prompts, max_new: int = 16) -> Dict[str, Any]:
+    def generate(self, prompts, max_new: int = 16,
+                 eos_id: Optional[int] = None) -> Dict[str, Any]:
         """Greedy-decode a batch in ONE dispatch. prompts: (B, T0) int32.
 
         Prompt tokens are teacher-forced through the same per-token step
@@ -283,50 +314,91 @@ class SplitBrainEngine:
         inside a single jitted lax.scan.  ``decode_s``/``tokens_per_s``
         cover the whole dispatch (prompt + decode), the same scope the
         stepwise reference times.
+
+        Compiled shapes are bucketed (prompt width / step count to powers of
+        two, T0 traced), so the jit cache is O(log max_len).  ``eos_id``
+        enables per-request stop tokens: rows pad with ``eos_id`` past each
+        stop and ``gen_len`` reports exact generated lengths; the meter then
+        replays boundary bytes per *active* token only.
         """
         prompts = jnp.asarray(prompts, jnp.int32)
         B, T0 = prompts.shape
-        steps = T0 - 1 + max_new
-        assert steps <= self.max_len, (steps, self.max_len)
+        assert T0 - 1 + max_new <= self.max_len, \
+            (T0 - 1 + max_new, self.max_len)
         if not self.jit:
-            return self._generate_stepwise(prompts, max_new)
-        key = (T0, max_new)
+            return self._generate_stepwise(prompts, max_new, eos_id)
+        Pb = slots_mod.bucket(T0)
+        Mb = slots_mod.bucket(max_new)
+        Sb = slots_mod.bucket(Pb - 1 + Mb)
+        key = (Pb, Mb, eos_id)
         if key not in self._generate_jit:
-            self._generate_jit[key] = self._generate_fn(T0, steps)
+            self._generate_jit[key] = self._generate_fn(Sb, Mb, eos_id)
+        if Pb > T0:
+            prompts = jnp.pad(prompts, ((0, 0), (0, Pb - T0)))
         cache = self.init_cache(B)
         t0 = time.perf_counter()
-        toks, k, v, length = self._generate_jit[key](
-            self._weights, cache["k"], cache["v"], cache["len"], prompts)
+        toks, k, v, length, n = self._generate_jit[key](
+            self._weights, cache["k"], cache["v"], cache["len"], prompts,
+            jnp.int32(T0), jnp.int32(T0 - 1 + max_new))
         toks = jax.block_until_ready(toks)
         dt = time.perf_counter() - t0
-        for _ in range(steps):
+        toks = np.asarray(toks)[:, :max_new]
+        gen_len = np.minimum(np.asarray(n), max_new)
+        # Boundary accounting, per ACTIVE token: every prompt-forcing step
+        # crosses for the whole batch; decode step t crosses only for the
+        # streams still running (eos_id=None -> all of them, the pre-EOS
+        # behaviour byte-for-byte).
+        for _ in range(T0 - 1):
             self._meter_token(B)
-        return {"tokens": np.asarray(toks),
+        for t in range(max_new):
+            a = int((gen_len > t).sum())
+            if a:
+                self._meter_token(a)
+        return {"tokens": toks,
+                "gen_len": gen_len,
                 "cache": {"k": k, "v": v, "len": length},
-                "tokens_per_s": B * max_new / dt,
+                "tokens_per_s": int(gen_len.sum()) / dt,
                 "decode_s": dt}
 
-    def _generate_stepwise(self, prompts: jnp.ndarray, max_new: int):
+    def _generate_stepwise(self, prompts: jnp.ndarray, max_new: int,
+                           eos_id: Optional[int] = None):
         """Token-at-a-time reference generation (eager decode loop).
 
         Timed over the WHOLE generation (prompt forcing + decode), same
         scope as the fused path's single dispatch, so the two tokens/s
-        figures are directly comparable.
+        figures are directly comparable.  EOS semantics mirror the fused
+        loop (finished rows emit/feed ``eos_id``, may break early once all
+        rows stop); NOTE the eager meter logs at runtime, so it counts every
+        executed lockstep step for the full batch — the per-active-token
+        accounting is a property of the replayed (jit) paths.
         """
         B, T0 = prompts.shape
         cache = self.init_cache(B)
         tok = prompts[:, 0]
         outs = []
+        alive = np.ones((B,), bool)
+        gen_len = np.zeros((B,), np.int32)
         t0 = time.perf_counter()
         for t in range(1, T0):
             _, _, cache = self.decode_token_eager(cache, tok)
             tok = prompts[:, t]
         for _ in range(max_new):
             tok, _, cache = self.decode_token_eager(cache, tok)
-            outs.append(np.asarray(tok))
+            emitted = np.asarray(tok)
+            gen_len += alive
+            if eos_id is not None:
+                emitted = np.where(alive, emitted, eos_id)
+                alive &= emitted != eos_id
+                tok = jnp.asarray(emitted, jnp.int32)
+            outs.append(emitted)
+            if eos_id is not None and not alive.any():
+                break
         dt = time.perf_counter() - t0
+        while len(outs) < max_new:
+            outs.append(np.full((B,), eos_id, np.int32))
         return {"tokens": np.stack(outs, 1), "cache": cache,
-                "tokens_per_s": B * max_new / dt, "decode_s": dt}
+                "gen_len": gen_len,
+                "tokens_per_s": int(gen_len.sum()) / dt, "decode_s": dt}
 
     def init_cache(self, batch: int) -> Dict[str, Any]:
         """Stacked KV cache: (L, B, Hkv, S, hd) — scan-sweepable, no lists."""
@@ -339,6 +411,84 @@ class SplitBrainEngine:
             "len": jnp.zeros((batch,), jnp.int32),
         }
 
+    # ---------------------------------------------------------- slot protocol
+    # Consumed by serve/scheduler.py: the stacked cache doubles as a slot
+    # cache — slot i is batch row i, at its own ragged position.
+    _SLOT_AXES = {"k": 1, "v": 1, "len": 0}
+
+    def init_slot_cache(self, n_slots: int) -> Dict[str, Any]:
+        return self.init_cache(n_slots)
+
+    def _prefill_fn(self, width: int):
+        """Bucketed B=1 prompt prefill: scan the split-brain token step over
+        the padded width, freezing state past ``true_len`` (traced)."""
+
+        def prefill(weights, k, v, ln, tokens, true_len):
+            def body(carry, t):
+                k, v, ln = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1,
+                                                   axis=1)[:, 0]
+                _, _, k2, v2, ln2 = self._token_step(weights, k, v, ln, tok)
+                keep = t < true_len
+                return (jnp.where(keep, k2, k), jnp.where(keep, v2, v),
+                        jnp.where(keep, ln2, ln)), None
+
+            (k, v, ln), _ = jax.lax.scan(body, (k, v, ln),
+                                         jnp.arange(width))
+            return k, v, ln
+
+        return jax.jit(prefill, donate_argnums=(1, 2))
+
+    def prefill_slot(self, prompt: np.ndarray):
+        """Prefill ONE request into a fresh B=1 cache (bucketed width).
+
+        prompt (T0,) -> (slot-shaped cache with len = T0-1, input token for
+        the next decode step).  Compiles once per power-of-two width.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        T0 = prompt.shape[0]
+        cache = self.init_cache(1)
+        if T0 > 1:
+            width = slots_mod.bucket(T0 - 1)
+            if width not in self._prefill_jit:
+                self._prefill_jit[width] = self._prefill_fn(width)
+            body = np.zeros((1, width), np.int32)
+            body[0, :T0 - 1] = prompt[:-1]
+            k, v, ln = self._prefill_jit[width](
+                self._weights, cache["k"], cache["v"], cache["len"],
+                jnp.asarray(body), jnp.int32(T0 - 1))
+            cache = {"k": k, "v": v, "len": ln}
+        return cache, int(prompt[-1])
+
+    def insert_slot(self, batched_cache, slot_cache, slot: int):
+        """Write a prefilled request into slot ``slot`` (donated batched
+        buffers, traced index: ONE compiled program covers every slot)."""
+        if self._slot_insert is None:
+            self._slot_insert = slots_mod.make_slot_insert(self._SLOT_AXES)
+        return self._slot_insert(batched_cache, slot_cache, jnp.int32(slot))
+
+    def decode_slots(self, cache: Dict[str, Any], tokens, active):
+        """One masked batched split-brain token step: every slot computes,
+        only ``active`` slots advance (K/V and ``len`` frozen elsewhere).
+        Fixed (max_slots, ...) shapes — zero recompiles in steady state."""
+        if self._slot_step is None:
+            def slot_step(weights, k, v, ln, tok, active):
+                nxt, _, k2, v2, ln2 = self._token_step(weights, k, v, ln, tok)
+                m = active[None, :, None, None, None]   # (L, B, Hkv, S, hd)
+                return (nxt, jnp.where(m, k2, k), jnp.where(m, v2, v),
+                        jnp.where(active, ln2, ln))
+
+            self._slot_step = jax.jit(slot_step, donate_argnums=(1, 2))
+        nxt, k, v, ln = self._slot_step(
+            self._weights, cache["k"], cache["v"], cache["len"],
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
+        return nxt, {"k": k, "v": v, "len": ln}
+
+    def meter_tokens(self, n: int) -> None:
+        """Replay ``n`` active tokens' boundary crossings (scheduler hook)."""
+        if int(n) > 0:
+            self._meter_token(int(n))
+
     def measured_bytes_per_token(self, batch: int = 1,
                                  count_q: bool = False) -> Dict[str, int]:
         """Per-token boundary bytes from the meter (per sequence).
@@ -347,13 +497,5 @@ class SplitBrainEngine:
         meter additionally logs the QKV input activation (h2d "x_qkv_in").
         ``count_q=False`` reproduces the paper's accounting exactly.
         """
-        d2h = h2d = 0
-        for direction, name, nbytes in self.meter.log:
-            if not count_q and name == "x_qkv_in":
-                continue
-            if direction == "d2h":
-                d2h += nbytes
-            else:
-                h2d += nbytes
-        return {"d2h": d2h // batch, "h2d": h2d // batch,
-                "total": (d2h + h2d) // batch}
+        tot = self.meter.measured_bytes(count_q)
+        return {k: v // batch for k, v in tot.items()}

@@ -62,48 +62,70 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
     return wrap
 
 
-def make_cache_prefill(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
-                       donate: bool = True):
-    """One fused prompt->KV-cache fill (api.prefill) with sharded cache."""
+def make_bucketed_prefill(cfg: ModelConfig, mesh: Mesh, params_like,
+                          cache_like, donate: bool = True):
+    """Bucketed prompt->KV-cache fill: tokens are right-padded to a
+    power-of-two width and ``true_len`` (a traced scalar) marks the real
+    prompt length, so ONE compiled program serves every prompt length that
+    rounds up to the same bucket (api.prefill_bucketed)."""
     p_specs = shd.param_pspecs(params_like, cfg, mesh)
     c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
-    def prefill_step(params, cache, tokens):
-        return api.prefill(params, cache, tokens, cfg)
+    def prefill_step(params, cache, tokens, true_len):
+        return api.prefill_bucketed(params, cache, tokens, true_len, cfg)
 
     return jax.jit(
         prefill_step,
         in_shardings=(shd.with_sharding(mesh, p_specs),
                       shd.with_sharding(mesh, c_specs),
-                      NamedSharding(mesh, P(b, None))),
+                      NamedSharding(mesh, P(b, None)),
+                      None),
         out_shardings=(NamedSharding(mesh, shd.logits_pspec(cfg, mesh, "decode")),
                        shd.with_sharding(mesh, c_specs)),
         donate_argnums=(1,) if donate else ())
 
 
 def make_decode_loop(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
-                     steps: int, donate: bool = True):
+                     steps: int, eos_id: Optional[int] = None,
+                     donate: bool = True):
     """``steps`` greedy decode iterations fused into ONE dispatch.
 
     The whole multi-token loop is a jitted ``lax.scan`` over decode_step —
     one program launch per generation instead of one per token.
-    Returns (tokens (B, steps), last_token (B,), cache).
+    Returns (tokens (B, steps), last_token (B,), cache, gen_len (B,)).
+
+    With ``eos_id`` set, a request that emits the stop token stops counting:
+    its later outputs are padded with ``eos_id`` (and fed back as such, so
+    the trajectory is deterministic) while ``gen_len`` freezes at the number
+    of tokens actually generated, EOS inclusive.  The cache keeps advancing
+    in lockstep — harmless garbage for a finished stream — which keeps the
+    scan body identical for all batch members.  Without ``eos_id``,
+    gen_len == steps and the tokens match the pre-EOS behaviour exactly.
     """
     p_specs = shd.param_pspecs(params_like, cfg, mesh)
     c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
     def decode_loop(params, cache, tokens):
+        B = tokens.shape[0]
+
         def body(carry, _):
-            cache, tok = carry
+            cache, tok, alive, n = carry
             logits, cache = api.decode_step(params, cache, tok, cfg)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return (cache, nxt), nxt
+            n = n + alive.astype(jnp.int32)
+            if eos_id is None:
+                emitted = nxt
+            else:
+                emitted = jnp.where(alive, nxt, jnp.int32(eos_id))
+                alive = alive & (emitted != eos_id)
+            return (cache, emitted, alive, n), emitted
 
-        (cache, tok), ys = jax.lax.scan(body, (cache, tokens), None,
-                                        length=steps)
-        return jnp.swapaxes(ys, 0, 1), tok, cache
+        init = (cache, tokens, jnp.ones((B,), bool), jnp.zeros((B,), jnp.int32))
+        (cache, tok, _, gen_len), ys = jax.lax.scan(body, init, None,
+                                                    length=steps)
+        return jnp.swapaxes(ys, 0, 1), tok, cache, gen_len
 
     return jax.jit(
         decode_loop,
@@ -112,6 +134,45 @@ def make_decode_loop(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
                       NamedSharding(mesh, P(b))),
         out_shardings=(NamedSharding(mesh, P(b, None)),
                        NamedSharding(mesh, P(b)),
+                       shd.with_sharding(mesh, c_specs),
+                       NamedSharding(mesh, P(b))),
+        donate_argnums=(1,) if donate else ())
+
+
+def make_slot_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
+                   axes, donate: bool = True):
+    """Masked batched decode step for continuous batching.
+
+    One greedy token for EVERY slot of the fixed-size slot cache, but only
+    slots where ``active`` is True advance: inactive slots' cache leaves
+    (K/V, recurrent state, ``len``) are frozen via a per-leaf select along
+    that leaf's own batch axis (serve/slots.py).  Shapes are fixed at
+    (max_slots, ...), so the steady-state serve loop re-dispatches this ONE
+    compiled program forever — zero recompiles.
+
+    ``cfg`` must have ``parallel.aligned_decode=False``: slots sit at ragged
+    positions, so the lockstep scalar-index cache write is wrong here.
+    """
+    assert not cfg.parallel.aligned_decode, \
+        "slot decode needs ragged cache writes (aligned_decode=False)"
+    from repro.serve import slots as slots_mod
+    p_specs = shd.param_pspecs(params_like, cfg, mesh)
+    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    b = shd.MeshAxes(mesh, cfg).resolve("batch")
+
+    def slot_step(params, cache, tokens, active):
+        logits, new_cache = api.decode_step(params, cache, tokens, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_cache = slots_mod.select_slots(active, new_cache, cache, axes)
+        return next_tok, new_cache
+
+    return jax.jit(
+        slot_step,
+        in_shardings=(shd.with_sharding(mesh, p_specs),
+                      shd.with_sharding(mesh, c_specs),
+                      NamedSharding(mesh, P(b)),
+                      NamedSharding(mesh, P(b))),
+        out_shardings=(NamedSharding(mesh, P(b)),
                        shd.with_sharding(mesh, c_specs)),
         donate_argnums=(1,) if donate else ())
 

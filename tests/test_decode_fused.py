@@ -73,6 +73,23 @@ def test_pallas_device_ops_match_reference():
                                np.asarray(lp, np.float32), rtol=1e-3, atol=1e-3)
 
 
+def test_bucketed_generate_returns_exact_cache():
+    """The fused scan may run a bucketed step count past the request, but
+    the returned cache must be EXACTLY the prompt+max_new state (no len
+    overrun, no clamp-writes past max_len): continuing to decode from it
+    matches a longer generate."""
+    cfg, params = _lm("tinyllama-1.1b")
+    eng = SplitBrainEngine(cfg, params, max_len=8, quantize=False)
+    prompts = np.random.default_rng(5).integers(
+        1, cfg.vocab_size, (1, 3)).astype(np.int32)
+    out = eng.generate(prompts, max_new=5)   # step bucket 16 > max_len 8
+    assert int(out["cache"]["len"][0]) == 2 + 5
+    nxt, _, _ = eng.decode_token(out["cache"],
+                                 jnp.asarray(out["tokens"][:, -1]))
+    ref = eng.generate(prompts, max_new=6)
+    assert int(nxt[0]) == int(ref["tokens"][0, 5])
+
+
 def test_decode_token_donates_cache():
     """The jitted path donates the KV buffers: the returned cache is live,
     the input cache is consumed (on backends implementing donation)."""
