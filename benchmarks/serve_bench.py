@@ -1,24 +1,37 @@
-"""Continuous-batching serve benchmark: slot scheduler vs sequential fused.
+"""Continuous-batching serve benchmark: paged vs dense slot cache, vs the
+sequential-fused baseline.
 
-Replays the same Poisson-arrival request trace through two serving
-disciplines on one ServeEngine:
+Replays the same Poisson-arrival request trace (ragged prompt lengths AND
+ragged ``max_new``) through three serving disciplines:
 
   sequential — the PR-1 baseline: requests served one at a time, each as a
                fused prefill + one-dispatch decode loop (fast per request,
                but concurrent arrivals queue behind the running one),
-  continuous — serve/scheduler.py: slot-based KV cache, bucketed B=1
-               prefill admits requests mid-flight, ONE persistent masked
-               batched decode step advances every active stream per
-               dispatch.
+  continuous — serve/scheduler.py over the DENSE slot cache: every slot
+               pins max_len positions whether the request uses them or not,
+  paged      — the same scheduler over the paged slot cache
+               (serve/pages.py): KV lives in a shared page pool behind
+               per-slot page tables, allocated on demand and freed on EOS,
+               with chunked prefill interleaving prompt chunks between
+               decode steps.
 
-Measures tokens/s, requests/s and mean per-request latency for both, and
-asserts the two structural invariants of the steady state:
+Measures tokens/s, requests/s (wall AND busy — arrival sleeps are reported
+separately so idle-heavy traces can't inflate apparent efficiency), mean
+per-request latency, and the paged-memory claim: peak resident KV bytes of
+the PERSISTENT cache state (pages in use at peak x page bytes) vs the dense
+slot cache, gated at >= 2x on the ragged workload.  (The reference paged
+decode step additionally materializes a transient dense view per dispatch —
+serve/pages.py module docstring / DESIGN.md §5 — which a page-table-aware
+attention kernel would eliminate; the gate is about what admission and
+cache sizing reason over, the persistent pool.)  Also asserts the
+structural invariants:
 
-  * zero recompiles after warmup — counted with the XLA backend-compile
-    monitoring listener (serve/slots.py::CompileCounter), not assumed,
-  * interface-traffic exactness — measured meter bytes over the whole
-    continuous run == (sum over requests of T0-1+gen) * the analytical
-    eq. 7-10 bytes/token.
+  * zero recompiles after warmup for BOTH cache layouts — counted with the
+    XLA backend-compile listener (serve/slots.py::CompileCounter),
+  * interface-traffic exactness — measured meter bytes over each continuous
+    run == (sum over requests of T0-1+gen) * the analytical eq. 7-10
+    bytes/token, for the dense AND the paged engine,
+  * paged throughput within 10% of the dense scheduler.
 
 Emits BENCH_serve.json so future PRs have a throughput trajectory:
 
@@ -31,13 +44,14 @@ import dataclasses
 import json
 import sys
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import api
+from repro.serve import pages
 from repro.serve import slots
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
@@ -46,16 +60,19 @@ from repro.serve.splitbrain_engine import traffic_model_for
 
 def _workload(cfg, n_requests: int, max_new: int, mean_gap_s: float,
               seed: int = 0) -> List[Request]:
-    """Poisson arrivals, prompt lengths uniform in [2, 16]."""
+    """Poisson arrivals; prompt lengths uniform in [2, 16] and max_new
+    uniform in [min(4, max_new), max_new] — the raggedness the paged pool
+    exploits."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(mean_gap_s, n_requests)
     arrivals = np.cumsum(gaps) - gaps[0]
+    lo = min(4, max_new)
     return [
         Request(uid=i,
                 prompt=rng.integers(1, cfg.vocab_size,
                                     (int(rng.integers(2, 17)),)
                                     ).astype(np.int32),
-                max_new=max_new,
+                max_new=int(rng.integers(lo, max_new + 1)),
                 arrival_s=float(arrivals[i]))
         for i in range(n_requests)
     ]
@@ -80,80 +97,138 @@ def _run_sequential(eng: ServeEngine, reqs: List[Request]) -> Dict[str, Any]:
             "mean_latency_s": float(np.mean(latency))}
 
 
-def _run_continuous(eng: ServeEngine, reqs: List[Request],
-                    max_slots: int) -> Dict[str, Any]:
-    sched = ContinuousBatchingScheduler(eng, max_slots=max_slots)
+def _run_continuous(eng: ServeEngine, reqs: List[Request], max_slots: int,
+                    prefill_chunk: Optional[int] = None) -> Dict[str, Any]:
+    sched = ContinuousBatchingScheduler(eng, max_slots=max_slots,
+                                        prefill_chunk=prefill_chunk)
     out = sched.run(list(reqs), realtime=True)
+    assert not out["rejected"], out["rejected"]
     lat = [res.finished_s - req.arrival_s
            for res, req in zip(out["results"],
                                sorted(reqs, key=lambda r: r.uid))]
     return {"wall_s": out["wall_s"],
+            "busy_s": out["busy_s"],
             "decoded_tokens": out["decoded_tokens"],
             "tokens_per_s": out["tokens_per_s"],
+            "tokens_per_s_busy": out["tokens_per_s_busy"],
             "requests_per_s": out["requests_per_s"],
+            "requests_per_s_busy": out["requests_per_s_busy"],
             "mean_latency_s": float(np.mean(lat)),
-            "steps": out["steps"]}
+            "steps": out["steps"],
+            "cache": eng.cache_stats(sched.cache)}
+
+
+def _check_traffic(eng: ServeEngine, reqs: List[Request], cfg) -> Dict[str, Any]:
+    n_tok = sum(len(r.prompt) - 1 + r.max_new for r in reqs)
+    analytic = n_tok * traffic_model_for(cfg).bytes_per_token()
+    measured = eng.measured_bytes()["total"]
+    return {"measured": measured, "analytical": analytic,
+            "exact": measured == analytic}
 
 
 def bench_arch(arch: str, n_requests: int, max_new: int, max_slots: int,
-               mean_gap_s: float, overrides: Dict[str, Any]) -> Dict[str, Any]:
+               mean_gap_s: float, overrides: Dict[str, Any],
+               page_size: int = 8, prefill_chunk: int = 8,
+               repeats: int = 1) -> Dict[str, Any]:
     cfg = get_config(arch).reduced(**overrides)
     cfg = dataclasses.replace(
         cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_len=16 + max_new + 1)
+    # room for the longest request, rounded so pages AND prefill chunks
+    # both tile the cache exactly
+    max_len = pages.round_len(16 - 1 + max_new, page_size, prefill_chunk)
+    slot_pages = max_len // page_size
+    # pool sized at HALF the dense token capacity (raggedness means most
+    # slots never approach max_len), floored so one worst-case request
+    # always fits even with --slots 1
+    num_pages = max(max_slots * slot_pages // 2, slot_pages) + 1
+    dense = ServeEngine(cfg, params, max_len=max_len)
+    paged = ServeEngine(cfg, params, max_len=max_len, page_size=page_size,
+                        num_pages=num_pages)
     reqs = _workload(cfg, n_requests, max_new, mean_gap_s)
 
-    # warm every bucket both disciplines touch (compiles excluded from timing)
-    warm = [Request(uid=-1 - i, prompt=r.prompt, max_new=r.max_new)
+    # warm every bucket all disciplines touch (compiles excluded from timing)
+    warm = [dataclasses.replace(r, uid=-1 - i, arrival_s=0.0)
             for i, r in enumerate(reqs)]
-    _run_sequential(eng, [dataclasses.replace(w, arrival_s=0.0) for w in warm])
-    ContinuousBatchingScheduler(eng, max_slots=max_slots).run(
-        [dataclasses.replace(w, arrival_s=0.0) for w in warm])
+    _run_sequential(dense, warm)
+    _run_continuous(dense, warm, max_slots)
+    _run_continuous(paged, warm, max_slots, prefill_chunk)
 
+    # each discipline is measured ``repeats`` times and the best steady-state
+    # run is reported (sub-second walls make single runs noisy on a shared
+    # machine); the structural invariants — zero recompiles, byte-exact
+    # traffic — must hold on EVERY repeat, not just the best one.
     counter = slots.CompileCounter.instance()
-    seq = _run_sequential(eng, reqs)
-    c0 = counter.count
-    eng.meter.reset()
-    cont = _run_continuous(eng, reqs, max_slots)
-    steady_recompiles = counter.count - c0
+    seq = max((_run_sequential(dense, reqs) for _ in range(repeats)),
+              key=lambda r: r["requests_per_s"])
 
-    n_tok = sum(len(r.prompt) - 1 + r.max_new for r in reqs)
-    analytic = n_tok * traffic_model_for(cfg).bytes_per_token()
-    measured = eng.measured_bytes()["total"]
+    def measure(eng, chunk):
+        best, recompiles, traffic = None, 0, None
+        for _ in range(repeats):
+            c0 = counter.count
+            eng.meter.reset()
+            r = _run_continuous(eng, reqs, max_slots, chunk)
+            recompiles += counter.count - c0
+            traffic = _check_traffic(eng, reqs, cfg)
+            assert traffic["exact"], traffic
+            if best is None or r["requests_per_s"] > best["requests_per_s"]:
+                best = r
+        return best, recompiles, traffic
 
+    cont, dense_recompiles, dense_traffic = measure(dense, None)
+    pag, paged_recompiles, paged_traffic = measure(paged, prefill_chunk)
+
+    dense_bytes = cont["cache"]["cache_bytes"]
+    paged_peak = pag["cache"]["peak_kv_bytes_in_use"]
     return {
         "config": cfg.name,
         "n_requests": n_requests,
         "max_new": max_new,
         "max_slots": max_slots,
+        "max_len": max_len,
         "mean_gap_s": mean_gap_s,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "prefill_chunk": prefill_chunk,
         "sequential": seq,
         "continuous": cont,
+        "paged": pag,
         "requests_per_s_speedup": cont["requests_per_s"] / seq["requests_per_s"],
         "tokens_per_s_speedup": cont["tokens_per_s"] / seq["tokens_per_s"],
-        "steady_state_recompiles": steady_recompiles,
+        "paged_vs_dense_requests_per_s":
+            pag["requests_per_s"] / cont["requests_per_s"],
+        "dense_cache_bytes": dense_bytes,
+        "paged_pool_bytes": pag["cache"]["cache_bytes"],
+        "paged_peak_bytes_in_use": paged_peak,
+        "paged_memory_saving": dense_bytes / paged_peak,
+        "steady_state_recompiles": dense_recompiles,
+        "paged_steady_state_recompiles": paged_recompiles,
         "compile_counter_available": counter.available,
-        "traffic_measured_bytes": measured,
-        "traffic_analytical_bytes": analytic,
-        "traffic_exact": measured == analytic,
-        "jit_caches": eng.jit_cache_sizes(),
+        "traffic_dense": dense_traffic,
+        "traffic_paged": paged_traffic,
+        "traffic_exact": dense_traffic["exact"] and paged_traffic["exact"],
+        "jit_caches": {"dense": dense.jit_cache_sizes(),
+                       "paged": paged.jit_cache_sizes()},
     }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="small workload, >=1x gate (CI smoke)")
+                    help="small workload, loose gates (CI smoke)")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=None)
     ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--mean-gap-ms", type=float, default=2.0,
                     help="mean Poisson inter-arrival gap (saturating default)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
-    n_requests = args.requests or (8 if args.quick else 32)
+    # 64 full-run requests: sub-second walls make the discipline ratios
+    # noisy on a shared machine; a longer trace stabilizes the gates
+    n_requests = args.requests or (8 if args.quick else 64)
     max_new = args.max_new or (8 if args.quick else 32)
     # d_model=128 keeps the reduced model decode GEMV-bound enough that
     # batching the slots is a real win, CPU or not
@@ -161,23 +236,37 @@ def main(argv=None) -> int:
     archs = ["llama2-7b"] if args.quick else ["llama2-7b", "rwkv6-7b"]
 
     results = [bench_arch(a, n_requests, max_new, args.slots,
-                          args.mean_gap_ms / 1e3, overrides) for a in archs]
+                          args.mean_gap_ms / 1e3, overrides,
+                          page_size=args.page_size,
+                          prefill_chunk=args.prefill_chunk,
+                          repeats=1 if args.quick else 2) for a in archs]
 
+    # rwkv keeps dense recurrent state (no-op page table): the memory gate
+    # only applies where the pool actually pages KV
     gate = 1.0 if args.quick else 2.0
+    mem_gate = 1.0 if args.quick else 2.0
+    rps_gate = 0.75 if args.quick else 0.9
     summary = {
         r["config"]: {
             "requests_per_s_speedup": round(r["requests_per_s_speedup"], 2),
             "tokens_per_s_speedup": round(r["tokens_per_s_speedup"], 2),
-            "zero_steady_state_recompiles": r["steady_state_recompiles"] == 0,
+            "paged_vs_dense_requests_per_s":
+                round(r["paged_vs_dense_requests_per_s"], 2),
+            "paged_memory_saving": round(r["paged_memory_saving"], 2),
+            "zero_steady_state_recompiles":
+                r["steady_state_recompiles"] == 0
+                and r["paged_steady_state_recompiles"] == 0,
             "traffic_exact": r["traffic_exact"],
         } for r in results
     }
     report = {
-        "schema": "serve_bench/v1",
+        "schema": "serve_bench/v2",
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "quick": args.quick,
         "gate_requests_per_s_speedup": gate,
+        "gate_paged_memory_saving": mem_gate,
+        "gate_paged_vs_dense_requests_per_s": rps_gate,
         "results": results,
         "summary": summary,
     }
@@ -187,12 +276,22 @@ def main(argv=None) -> int:
     print(json.dumps(summary, indent=2))
     print(f"wrote {args.out}")
 
+    def paged_ok(r):
+        if "num_pages" not in r["paged"]["cache"]:
+            return True               # family never paged (dense fallback)
+        return (r["paged_memory_saving"] >= mem_gate
+                and r["paged_vs_dense_requests_per_s"] >= rps_gate)
+
     ok = all(r["requests_per_s_speedup"] >= gate
              and r["steady_state_recompiles"] == 0
-             and r["traffic_exact"] for r in results)
+             and r["paged_steady_state_recompiles"] == 0
+             and r["traffic_exact"]
+             and paged_ok(r) for r in results)
     if not ok:
-        print(f"FAIL: continuous < {gate}x sequential requests/s, steady-state"
-              " recompile, or traffic mismatch", file=sys.stderr)
+        print(f"FAIL: continuous < {gate}x sequential requests/s, paged < "
+              f"{mem_gate}x memory saving, paged < {rps_gate}x dense "
+              "requests/s, steady-state recompile, or traffic mismatch",
+              file=sys.stderr)
     return 0 if ok else 1
 
 

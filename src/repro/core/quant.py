@@ -10,8 +10,11 @@ Pipeline (per weight matrix):
      error is below ``laq_slack`` of the scale (this is the "exploiting
      knowledge of weight values during synthesis" step).
 
-Activations are INT8 symmetric per-tensor (§V-C), with a dynamic-range
-fallback used by the serving path.
+Activations are INT8 symmetric (§V-C).  The paper's device model calibrates
+ONE static range per tensor; this implementation defaults to per-row
+(per-token) dynamic scales — the serving path's dynamic-range mode, which is
+what the W4A8 kernel consumes — and ``quantize_activations_int8(...,
+per_tensor=True)`` gives the paper's per-tensor static-range behaviour.
 
 All functions are functional and jittable; weights-side tables come from
 ``core.csd`` and are baked in as constants.
@@ -118,10 +121,22 @@ def dequantize(ql: QuantizedLinear, dtype=jnp.bfloat16) -> jnp.ndarray:
     return (ql.codes.astype(jnp.float32) * ql.scales).astype(dtype)
 
 
-def quantize_activations_int8(x: jnp.ndarray):
-    """Symmetric per-row (token) INT8 activation quantization."""
+def quantize_activations_int8(x: jnp.ndarray, *, per_tensor: bool = False):
+    """Symmetric INT8 activation quantization.
+
+    Default is per-row (per-token) dynamic scaling — each row gets
+    ``amax(row)/127`` — which is what the serving path and the W4A8 matmul
+    use.  ``per_tensor=True`` collapses to a single ``amax(x)/127`` scale
+    for the whole tensor, modelling the paper's §V-C device with one static
+    calibrated activation range (the scale still broadcasts like the
+    per-row one, so downstream rescaling code is shape-agnostic).
+    """
     x = jnp.asarray(x, jnp.float32)
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    if per_tensor:
+        scale = jnp.broadcast_to(jnp.max(jnp.abs(x)) / 127.0,
+                                 x.shape[:-1] + (1,))
+    else:
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale

@@ -68,6 +68,20 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
                                 window=window, softcap=softcap, scale=scale)
 
 
+def chunk_attention(q, k_cache, v_cache, q_pos, *,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    use_pallas: Optional[bool] = None):
+    """Chunked-prefill attention: a chunk written in place into a linear KV
+    cache attends causally over absolute positions (serve-path paged/chunked
+    prefill).  Reference path only — like decode, the W-row chunk is
+    bandwidth-bound, so there is no Pallas variant."""
+    del use_pallas
+    return ref.chunk_attention(q, k_cache, v_cache, q_pos, window=window,
+                               softcap=softcap, scale=scale)
+
+
 def rwkv6_chunked(r, k, v, w, u, state=None, *, chunk: int = 64):
     return ref.rwkv6_scan_chunked(r, k, v, w, u, state, chunk=chunk)
 

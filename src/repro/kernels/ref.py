@@ -190,6 +190,39 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
 
 
+def chunk_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, q_pos: jnp.ndarray, *,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Attention of a chunk already written into a linear KV cache.
+
+    The chunked-prefill primitive: the chunk's own K/V sit in the cache at
+    absolute positions ``q_pos`` (per query row), preceded by the cached
+    prefix.  Query row r may see key slot s iff ``s <= q_pos[b, r]`` (and
+    within ``window`` if set) — causal over absolute positions, so bucket
+    padding rows and garbage past the written region are masked out.
+
+    q: (B, Hq, W, D); caches: (B, Hkv, S, D) linear (non-ring) layout;
+    q_pos: (B, W) absolute positions of the chunk rows.
+    """
+    B, Hq, W, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    s = (scale if scale is not None else D ** -0.5)
+    kr = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) * s
+    logits = _soft_cap(logits, softcap)
+    key_pos = jnp.arange(S)[None, None, :]
+    valid = key_pos <= q_pos[:, :, None]                   # (B, W, S)
+    if window is not None:
+        valid &= key_pos > (q_pos[:, :, None] - window)
+    logits = jnp.where(valid[:, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
+
+
 # ----------------------------------------------------------------------------
 # RWKV6 (Finch) WKV recurrence with data-dependent decay
 # ----------------------------------------------------------------------------

@@ -6,6 +6,11 @@
   # continuous batching: N concurrent requests over a slot-based KV cache
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --requests 8 --slots 4 --max-new 16
+
+  # paged KV cache + chunked prefill: KV lives in a shared page pool,
+  # prompts stream in fixed-width chunks between decode steps
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --page-size 8 --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import api
+from repro.serve import pages
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 
@@ -37,7 +43,22 @@ def main(argv=None):
                          "slot-based continuous-batching scheduler")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="enable the paged KV cache with this page size "
+                         "(tokens per page; must divide max_len)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool capacity (default: dense-equivalent)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill width (interleaves prompt chunks "
+                         "with decode steps; must divide max_len)")
     args = ap.parse_args(argv)
+    if args.num_pages is not None and args.page_size is None:
+        ap.error("--num-pages requires --page-size (the paged KV cache)")
+    if not args.continuous and (args.page_size is not None
+                                or args.num_pages is not None
+                                or args.prefill_chunk is not None):
+        ap.error("--page-size/--num-pages/--prefill-chunk only apply to "
+                 "the --continuous serve loop")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -48,8 +69,11 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
 
     if args.continuous:
-        eng = ServeEngine(cfg, params,
-                          max_len=args.prompt_len + args.max_new + 1)
+        # pages AND prefill chunks must both tile the cache
+        max_len = pages.round_len(args.prompt_len + args.max_new + 1,
+                                  args.page_size, args.prefill_chunk)
+        eng = ServeEngine(cfg, params, max_len=max_len,
+                          page_size=args.page_size, num_pages=args.num_pages)
         lo = min(2, args.prompt_len)
         reqs = [Request(uid=i,
                         prompt=rng.integers(
@@ -59,9 +83,10 @@ def main(argv=None):
                         max_new=args.max_new)
                 for i in range(args.requests)]
         sched = ContinuousBatchingScheduler(eng, max_slots=args.slots,
-                                            eos_id=args.eos_id)
+                                            eos_id=args.eos_id,
+                                            prefill_chunk=args.prefill_chunk)
         out = sched.run(reqs)
-        print(json.dumps({
+        report = {
             "arch": cfg.name,
             "requests": args.requests,
             "slots": args.slots,
@@ -70,7 +95,11 @@ def main(argv=None):
             "tokens_per_s": round(out["tokens_per_s"], 2),
             "requests_per_s": round(out["requests_per_s"], 2),
             "gen_len": [r.gen_len for r in out["results"]],
-        }))
+            "rejected": [(r.uid, r.reason) for r in out["rejected"]],
+        }
+        if args.page_size:
+            report["cache"] = eng.cache_stats(sched.cache)
+        print(json.dumps(report))
         return out
 
     prompts = rng.integers(1, cfg.vocab_size,

@@ -111,6 +111,42 @@ def prefill_bucketed(params, cache, tokens, true_len, cfg: ModelConfig):
     return last, cache
 
 
+def prefill_chunk(params, cache, tokens, true_len, cfg: ModelConfig, *,
+                  block: bool = True):
+    """Advance a (possibly non-empty) cache by one right-padded prompt chunk.
+
+    The chunked-prefill primitive: unlike :func:`prefill_bucketed` this
+    starts from whatever state the cache is in, so a long prompt can be fed
+    as fixed-width chunks interleaved with decode steps (serve/scheduler.py).
+    tokens (B, W) with W the static chunk width; only the first ``true_len``
+    (traced) positions are real.  Returns the advanced cache — no logits:
+    the last prompt token goes through the decode step, which produces them.
+
+    ``block=True`` takes the lm fused chunk path
+    (``models/transformer.py::prefill_chunk``); the caller must guarantee a
+    linear (non-ring) cache layout.  ``block=False`` scans ``decode_step``
+    with the state update masked past ``true_len`` — correct for every
+    family (recurrent state never sees padding, ring buffers write exactly
+    as decode would).
+    """
+    mod = family_module(cfg)
+    W = tokens.shape[1]
+    true_len = jnp.asarray(true_len, jnp.int32)
+    if block and hasattr(mod, "prefill_chunk"):
+        return mod.prefill_chunk(params, cache, tokens, true_len, cfg)
+
+    def body(c, xt):
+        tok, t = xt
+        _, c_new = mod.decode_step(params, c, tok, cfg)
+        keep = t < true_len
+        c = jax.tree.map(lambda new, old: jnp.where(keep, new, old), c_new, c)
+        return c, None
+
+    steps = jnp.arange(W, dtype=jnp.int32)
+    cache, _ = jax.lax.scan(body, cache, (tokens.T, steps))
+    return cache
+
+
 def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
             aux_weight: float = 0.01):
     """Next-token cross-entropy (+ MoE load-balance aux)."""

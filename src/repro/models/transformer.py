@@ -317,6 +317,72 @@ def prefill(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
     return logits, new_cache
 
 
+def prefill_chunk(params, cache, tokens: jnp.ndarray, true_len, cfg: ModelConfig):
+    """Advance a (possibly non-empty) KV cache by one right-padded chunk.
+
+    The chunked-prefill block path: tokens (B, W) are the next ``true_len``
+    prompt positions (bucket-padded to W), written at offset ``cache["len"]``
+    and attended causally against the whole cache via
+    ``ops.chunk_attention`` — positions past each row are masked, so the
+    padding rows' K/V are garbage that the next chunk overwrites (or that
+    sits beyond ``len``, unreachable by decode).  Requires every cache slot
+    to be a LINEAR (non-ring) buffer of the full ``max_len``; windowed ring
+    layouts take the masked scan-of-decode fallback in ``api.prefill_chunk``.
+
+    PRECONDITION (enforced by the caller, not checkable on a traced
+    ``len``): ``cache["len"]`` must be a multiple of W and W must divide
+    the cache size, i.e. chunks are fed full-width back to back with only
+    the LAST one padded — the scheduler's feeding order.  A misaligned
+    start would make ``dynamic_update_slice`` clamp ``start + W`` back
+    into bounds and silently overwrite earlier positions.
+
+    Returns the cache with ``len += true_len`` (no logits: chunked prefill
+    feeds the last prompt token to the decode step, which produces them).
+    """
+    n_groups, group_size = group_layout(cfg)
+    P = len(cfg.layer_pattern)
+    B, W = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    start = cache["len"]                                   # (B,)
+    positions = start[:, None] + jnp.arange(W)[None, :]    # (B, W)
+
+    def group_fn(x, group_in):
+        gp = group_in["blocks"]
+        new_k, new_v = [], []
+        for j in range(group_size):
+            slot = j % P
+            spec = cfg.layer_pattern[slot]
+            pj = jax.tree.map(lambda a: a[j], gp)
+            kc = group_in["k"][slot][j // P]
+            vc = group_in["v"][slot][j // P]
+            q, k, v = _block_qkv(pj, x, positions, cfg)
+            kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+                c, kk, (0, i, 0)))(kc, k, start)
+            vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+                c, vv, (0, i, 0)))(vc, v, start)
+            o = ops.chunk_attention(q, kc, vc, positions, window=spec.window,
+                                    softcap=cfg.softcap,
+                                    use_pallas=cfg.use_pallas)
+            x = _block_tail(pj, x, o, cfg)
+            new_k.append(kc)
+            new_v.append(vc)
+        upd = {
+            "k": [jnp.stack(new_k[s::P]) for s in range(P)],
+            "v": [jnp.stack(new_v[s::P]) for s in range(P)],
+        }
+        return x, upd
+
+    xs = {"blocks": params["blocks"], "k": cache["k"], "v": cache["v"]}
+    _, upd = jax.lax.scan(group_fn, x, xs)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
+    new_cache["len"] = cache["len"] + jnp.asarray(true_len, jnp.int32)
+    return new_cache
+
+
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
     """One decode step. tokens (B,) -> (logits (B, V), new_cache)."""
     n_groups, group_size = group_layout(cfg)

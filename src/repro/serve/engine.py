@@ -23,6 +23,18 @@ pytree where each slot is an independent request stream, admitted mid-flight
 by a bucketed B=1 prefill and advanced by ONE persistent masked decode step.
 Interface-traffic accounting (``meter``) replays eq. 7-10 bytes per *active*
 token (DESIGN.md §4).
+
+``page_size=N`` switches the slot cache to the paged layout (serve/pages.py,
+DESIGN.md §5): sequence-growing cache leaves live in a shared page pool with
+a host-owned per-slot page table, allocated on demand and freed on EOS, so
+resident KV bytes track actual occupancy instead of max_slots × max_len.
+The paged decode step gathers the dense view through the (traced) table,
+runs the SAME family decode math, and scatters back only the one new token
+per active slot — fixed shapes throughout, zero steady-state recompiles.
+Leaves that do not scale with ``max_len`` (recurrent state, window ring
+buffers) pass through dense — the recurrent families' no-op page table.
+``prefill_chunk_slot`` feeds a prompt as fixed-width chunks so the scheduler
+can interleave prefill with decode (chunked prefill).
 """
 from __future__ import annotations
 
@@ -38,13 +50,15 @@ from repro.configs.base import ModelConfig
 from repro.core.splitbrain import TrafficMeter, TrafficModel
 from repro.launch.mesh import make_test_mesh
 from repro.models import api
+from repro.serve import pages as pages_mod
 from repro.serve import slots as slots_mod
 from repro.train import step as step_mod
 
 
-class ServeEngine:
+class ServeEngine(pages_mod.PagedEngineMixin):
     def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128,
-                 fused: bool = True):
+                 fused: bool = True, page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh if mesh is not None else make_test_mesh()
@@ -64,6 +78,20 @@ class ServeEngine:
         self._slot_step_jit: Dict[int, Any] = {}       # keyed by n_slots
         self._slot_insert = None
         self._axes = None
+        # ---- paged slot cache (page_size=None keeps the dense slot layout)
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self._pager = (pages_mod.HostPager(page_size, num_pages, max_len)
+                       if page_size is not None else None)
+        self._paging_active = False            # set by init_slot_cache
+        self._seq_ax = None
+        self._paged_step = None
+        self._chunk_jit: Dict[int, Any] = {}   # keyed by chunk width
+        # the lm fused chunk path needs every cache slot linear (non-ring)
+        self._chunk_block_ok = (
+            cfg.family == "lm" and not cfg.cross_attn_every
+            and all(s.window is None or s.window >= max_len
+                    for s in cfg.layer_pattern))
 
     # -------------------------------------------------------- jitted programs
     def _get_serve_step(self, cache):
@@ -93,6 +121,7 @@ class ServeEngine:
             "prefill_buckets": len(self._prefill_jit),
             "loop_buckets": len(self._loop_jit),
             "slot_steps": len(self._slot_step_jit),
+            "chunk_widths": len(self._chunk_jit),
         }
 
     # ----------------------------------------------------- traffic accounting
@@ -133,6 +162,11 @@ class ServeEngine:
             fused = self.fused
         cfg = self.cfg
         B, T0 = prompts.shape
+        if T0 - 1 + max_new > self.max_len:
+            raise ValueError(
+                f"request does not fit the cache: prompt_len={T0} + "
+                f"max_new={max_new} needs {T0 - 1 + max_new} positions but "
+                f"max_len={self.max_len}")
         with self.mesh:
             if not fused:
                 cache = api.init_cache(cfg, B, self.max_len, frontend=frontend,
@@ -234,12 +268,49 @@ class ServeEngine:
             self._axes = slots_mod.batch_axes(a, b)
         return self._axes
 
+    def _slot_seq_axes(self):
+        """Per-leaf sequence axis (-1 = does not page), by shape diffing two
+        ``max_len`` builds — mirrors the batch-axis discovery above."""
+        if self._seq_ax is None:
+            ps = self.page_size
+            a = jax.eval_shape(lambda: api.init_cache(self.cfg, 2, self.max_len))
+            b = jax.eval_shape(
+                lambda: api.init_cache(self.cfg, 2, self.max_len + ps))
+            self._seq_ax = pages_mod.seq_axes(a, b, ps)
+        return self._seq_ax
+
     def init_slot_cache(self, n_slots: int):
-        """Fixed-shape batched cache, one slot per concurrent stream."""
+        """Fixed-shape batched cache, one slot per concurrent stream.
+
+        With ``page_size`` set, sequence-growing leaves are allocated as a
+        shared page pool instead (serve/pages.py) and a fresh host-side
+        :class:`~repro.serve.pages.PagePool` tracks the per-slot page
+        tables; everything else keeps the dense ``(n_slots, ...)`` layout.
+        """
         assert not self.cfg.frontend_tokens and not self.cfg.cross_attn_every, \
             "continuous batching covers the text-only families"
+        no_paged_leaves = self.page_size is not None and all(
+            ax < 0 for ax in jax.tree.leaves(self._slot_seq_axes()))
+        if self.page_size is None or no_paged_leaves:
+            # recurrent/ring-only families have nothing that scales with
+            # max_len: the page table is a no-op and the dense layout IS
+            # the occupancy-proportional one — skip pool bookkeeping.
+            self._paging_active = False
+            with self.mesh:
+                return api.init_cache(self.cfg, n_slots, self.max_len)
+        self._paging_active = True
+        pool = self._pager.reset(n_slots)
+        shape = jax.eval_shape(
+            lambda: api.init_cache(self.cfg, n_slots, self.max_len))
         with self.mesh:
-            return api.init_cache(self.cfg, n_slots, self.max_len)
+            return pages_mod.make_pool(shape, self._slot_axes(),
+                                       self._slot_seq_axes(),
+                                       pool.num_pages, self.page_size)
+
+    # reserve_slot / can_ever_admit / free_slot / cache_stats come from
+    # pages_mod.PagedEngineMixin (dense engines admit everything, no-ops).
+    def _stats_seq_axes(self):
+        return self._slot_seq_axes()
 
     def prefill_slot(self, prompt: np.ndarray):
         """Prefill ONE request into a fresh B=1 cache (bucketed width).
@@ -262,9 +333,46 @@ class ServeEngine:
                                    np.int32(T0 - 1))
         return cache, int(prompt[-1])
 
+    def new_request_cache(self):
+        """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
+        with self.mesh:
+            return api.init_cache(self.cfg, 1, self.max_len)
+
+    def prefill_chunk_slot(self, cache, chunk: np.ndarray, true_w: int):
+        """Advance a B=1 request cache by one right-padded prompt chunk.
+
+        chunk (W,) with W the FIXED chunk width (one compiled program per
+        width, donated cache); only the first ``true_w`` tokens are real.
+        The scheduler interleaves these with batched decode steps so a long
+        prompt never head-of-line-blocks the decoding slots (DESIGN.md §5).
+        """
+        chunk = np.asarray(chunk, np.int32)
+        W = chunk.shape[0]
+        pages_mod.check_chunk_width(W, self.max_len)
+        if W not in self._chunk_jit:
+            block = self._chunk_block_ok
+
+            def chunk_fn(params, cache, tokens, true_len):
+                return api.prefill_chunk(params, cache, tokens, true_len,
+                                         self.cfg, block=block)
+
+            self._chunk_jit[W] = jax.jit(chunk_fn, donate_argnums=(1,))
+        with self.mesh:
+            return self._chunk_jit[W](self.params, cache, chunk[None, :],
+                                      jnp.int32(true_w))
+
     def insert_slot(self, batched_cache, slot_cache, slot: int):
         """Write a prefilled request into slot ``slot`` (donated, traced
-        index: ONE compiled program covers every slot)."""
+        index: ONE compiled program covers every slot).  On the paged
+        layout the host allocates the slot's pages first, then the B=1
+        dense cache is scattered block-wise onto them (excess logical pages
+        land on the scratch page — fixed write count, no recompiles)."""
+        if self._paging_active:
+            n_tok = int(np.asarray(slot_cache["len"])[0])
+            with self.mesh:
+                return self.paged_insert(batched_cache, slot_cache, slot,
+                                         self._slot_axes(),
+                                         self._slot_seq_axes(), n_tok)
         if self._slot_insert is None:
             self._slot_insert = slots_mod.make_slot_insert(self._slot_axes())
         with self.mesh:
@@ -274,8 +382,39 @@ class ServeEngine:
     def decode_slots(self, cache, tokens, active):
         """One masked batched decode step: every slot computes, only active
         slots advance (inactive cache leaves frozen).  Fixed shapes — the
-        steady-state loop re-dispatches one compiled program forever."""
+        steady-state loop re-dispatches one compiled program forever.
+
+        Paged layout: the host allocates any page the step will write into
+        (position ``len``), then the jitted step gathers the dense view
+        through the traced page table, runs the SAME family decode math,
+        and scatters the one new token per active slot back to its page.
+        """
         n = int(tokens.shape[0])
+        if self._paging_active:
+            act = np.asarray(active, bool)
+            self._pager.pre_decode(act)
+            if self._paged_step is None:
+                ba, sa = self._slot_axes(), self._slot_seq_axes()
+                rcfg = self._ragged_cfg
+
+                def paged_step(params, pcache, table, toks, act_m):
+                    view = pages_mod.gather_tree(pcache, table, ba, sa)
+                    pos = view["len"]
+                    logits, new = api.decode_step(params, view, toks, rcfg)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    new = slots_mod.select_slots(act_m, new, view, ba)
+                    pc = pages_mod.scatter_token_tree(
+                        pcache, new, table, pos, act_m, ba, sa)
+                    return nxt, pc
+
+                self._paged_step = jax.jit(paged_step, donate_argnums=(1,))
+            with self.mesh:
+                out = self._paged_step(self.params, cache,
+                                       self._pager.table(),
+                                       jnp.asarray(tokens, jnp.int32),
+                                       jnp.asarray(active, bool))
+            self._pager.post_decode(act)
+            return out
         if n not in self._slot_step_jit:
             self._slot_step_jit[n] = step_mod.make_slot_step(
                 self._ragged_cfg, self.mesh, self.params, cache,
@@ -284,3 +423,4 @@ class ServeEngine:
             return self._slot_step_jit[n](
                 self.params, cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(active, bool))
+

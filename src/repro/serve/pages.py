@@ -1,0 +1,478 @@
+"""Paged KV-cache plumbing: a shared page pool behind the slot protocol.
+
+The paper's Split-Brain protocol (§IV-B) makes the host CPU the sole owner
+of dynamic KV state; this module is the host's memory manager.  Instead of
+pinning a full ``(max_slots, ..., max_len, ...)`` cache per slot, every
+sequence-growing cache leaf is re-laid-out as a *page pool*
+
+    dense leaf  (..., B, ..., S, ...)          S = max_len
+    pool  leaf  (num_pages, page_size, *rest)  rest = shape minus B and S
+
+plus one per-slot *page table* ``(max_slots, max_len // page_size)`` of
+physical page ids, owned host-side by :class:`PagePool` (plain numpy — no
+device sync on the allocation path).  Pages are allocated on demand as a
+sequence grows and returned to the free list when its request finishes, so
+resident KV bytes track actual token occupancy.
+
+Physical page 0 is reserved as a *scratch* page: table entries beyond a
+slot's allocated pages point at it, so every jitted program can write a
+fixed number of pages (traced indices, fixed shapes — zero steady-state
+recompiles) and the excess lands in garbage that no gather ever reads
+(attention masks positions >= ``len``).
+
+Leaves that do NOT scale with ``max_len`` — rwkv WKV state, hymba SSM
+state, sliding-window ring buffers, ``len`` itself — keep their dense
+``(max_slots, ...)`` layout and pass through untouched: the recurrent
+families effectively run a no-op page table.  Discovery is by shape
+diffing (:func:`seq_axes`), the same trick ``serve/slots.py::batch_axes``
+uses for the batch dimension.
+
+The traced helpers (:func:`gather_tree` / :func:`scatter_token_tree` /
+:func:`insert_tree`) are the paged variant of the dense cache plumbing:
+``gather_tree`` reconstructs the exact dense-view pytree the family
+``decode_step`` already understands (so paged decode reuses the verified
+attention math bit-for-bit), and ``scatter_token_tree`` writes back only
+the one new token per active slot — O(B × token bytes) pool traffic per
+step.
+
+Scope of the memory claim: what paging shrinks is the PERSISTENT cache
+state — the pool allocation and the peak pages-in-use that admission and
+the serve_bench gate reason about.  The reference decode step still
+materializes the gathered dense view as a per-dispatch TRANSIENT, so the
+instantaneous high-water mark during a step is view + pool; eliminating
+that transient needs a page-table-aware attention kernel that walks
+``pool[table]`` block-wise (the TPU/Pallas follow-up), not cache-layout
+plumbing.  In-flight chunked prefills each hold a dense B=1 request cache
+until insertion, bounded by the scheduler's ``max_prefill_jobs`` cap.
+DESIGN.md §5 spells out all three pieces.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PagePool",
+    "HostPager",
+    "PagedEngineMixin",
+    "check_chunk_width",
+    "round_len",
+    "seq_axes",
+    "make_pool",
+    "gather_view",
+    "gather_tree",
+    "scatter_token_tree",
+    "insert_tree",
+    "pool_bytes",
+    "page_token_bytes",
+]
+
+SCRATCH_PAGE = 0
+
+
+def check_chunk_width(width: int, max_len: int) -> None:
+    """Chunk writes must never spill past the cache end: W | max_len plus
+    the full-width feeding order (transformer.prefill_chunk precondition)
+    guarantee every chunk lands inside the buffer.  Shared by both engines'
+    ``prefill_chunk_slot``."""
+    if max_len % width != 0:
+        raise ValueError(
+            f"chunk width {width} must divide max_len ({max_len}) so "
+            f"chunk writes never spill past the cache end")
+
+
+def round_len(n: int, *quanta: Optional[int]) -> int:
+    """Round a cache length up so every given quantum (page size, prefill
+    chunk width) tiles it exactly — a COMMON multiple, not each quantum in
+    turn (sequential rounding can un-align the earlier one)."""
+    q = math.lcm(*(int(x) for x in quanta if x))
+    return -(-int(n) // q) * q
+
+
+# ----------------------------------------------------------------------------
+# Host-side allocator (numpy only — the host owns the dynamic state)
+# ----------------------------------------------------------------------------
+class PagePool:
+    """Free-list page allocator with worst-case admission reservations.
+
+    ``try_reserve(slot, n_tokens)`` claims the worst-case page count for a
+    request at admission time; ``ensure(slot, n_tokens)`` then draws pages
+    lazily as the sequence actually grows, which therefore never fails.
+    ``free_slot`` returns both the pages and the reservation.  Reservation
+    admission is deliberately conservative (no mid-decode preemption needed);
+    ``peak_pages_in_use`` records what was ever resident simultaneously.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, n_slots: int,
+                 slot_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page {SCRATCH_PAGE} "
+                             f"is the reserved scratch page), got {num_pages}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.slot_pages = int(slot_pages)
+        # logical->physical map; unallocated entries hit the scratch page
+        self.table = np.full((n_slots, slot_pages), SCRATCH_PAGE, np.int32)
+        self._free = list(range(num_pages - 1, SCRATCH_PAGE, -1))
+        self._n_alloc = np.zeros(n_slots, np.int64)
+        self._reserved = np.zeros(n_slots, np.int64)
+        self.total_reserved = 0
+        self.pages_in_use = 0
+        self.peak_pages_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (scratch excluded)."""
+        return self.num_pages - 1
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.page_size)
+
+    def try_reserve(self, slot: int, n_tokens: int) -> bool:
+        """Claim worst-case pages for a request; False if the pool is full."""
+        assert self._reserved[slot] == 0, f"slot {slot} already reserved"
+        need = self.pages_for(n_tokens)
+        if need > self.slot_pages:
+            return False              # longer than one slot's page table
+        if self.total_reserved + need > self.capacity:
+            return False
+        self._reserved[slot] = need
+        self.total_reserved += need
+        return True
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Allocate pages so the slot can hold ``n_tokens`` positions."""
+        need = self.pages_for(n_tokens)
+        assert need <= self._reserved[slot], \
+            (f"slot {slot} needs {need} pages but reserved only "
+             f"{self._reserved[slot]} — reservation bug")
+        while self._n_alloc[slot] < need:
+            page = self._free.pop()   # cannot fail: alloc <= reservation
+            self.table[slot, self._n_alloc[slot]] = page
+            self._n_alloc[slot] += 1
+            self.pages_in_use += 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+
+    def free_slot(self, slot: int) -> None:
+        """Return the slot's pages and reservation to the pool."""
+        n = int(self._n_alloc[slot])
+        for i in range(n):
+            self._free.append(int(self.table[slot, i]))
+        self.table[slot, :] = SCRATCH_PAGE
+        self.pages_in_use -= n
+        self._n_alloc[slot] = 0
+        self.total_reserved -= int(self._reserved[slot])
+        self._reserved[slot] = 0
+
+
+class HostPager:
+    """The host-side paging companion both engines own when ``page_size``
+    is set: PagePool lifecycle, the per-slot length mirror (so the decode
+    loop never syncs ``len`` off the device), admission queries, and byte
+    accounting.  The jitted gather/scatter programs stay with each engine
+    (they bind its own decode step); every host-side decision lives here
+    exactly once.
+    """
+
+    def __init__(self, page_size: int, num_pages: Optional[int],
+                 max_len: int):
+        if max_len % page_size != 0:
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of page_size "
+                f"({page_size}) so the page table tiles the cache exactly")
+        self.page_size = int(page_size)
+        self.max_len = int(max_len)
+        self.slot_pages = max_len // page_size
+        self._num_pages_opt = num_pages
+        self.pool: Optional[PagePool] = None
+        self.host_len = None
+        self._table_dev = None     # device copy, invalidated on table writes
+
+    def reset(self, n_slots: int) -> PagePool:
+        """Fresh pool + length mirror for a new slot cache."""
+        num_pages = (self._num_pages_opt if self._num_pages_opt is not None
+                     else n_slots * self.slot_pages + 1)   # +1: scratch
+        self.pool = PagePool(num_pages, self.page_size, n_slots,
+                             self.slot_pages)
+        self.host_len = np.zeros((n_slots,), np.int64)
+        self._table_dev = None
+        return self.pool
+
+    def _tokens_for(self, prompt_len: int, max_new: int) -> int:
+        return prompt_len - 1 + max_new
+
+    def try_reserve(self, slot: int, prompt_len: int, max_new: int) -> bool:
+        return self.pool.try_reserve(slot,
+                                     self._tokens_for(prompt_len, max_new))
+
+    def can_ever_admit(self, prompt_len: int, max_new: int) -> bool:
+        """Static capacity check: could this request be admitted into an
+        IDLE pool?  False means waiting for frees can never help — the
+        scheduler rejects immediately instead of head-of-line blocking."""
+        need = self.pool.pages_for(self._tokens_for(prompt_len, max_new))
+        return need <= min(self.pool.slot_pages, self.pool.capacity)
+
+    def free(self, slot: int) -> None:
+        self.pool.free_slot(slot)
+        self.host_len[slot] = 0
+        self._table_dev = None
+
+    def _ensure(self, slot: int, n_tokens: int) -> None:
+        before = self.pool.pages_in_use
+        self.pool.ensure(slot, n_tokens)
+        if self.pool.pages_in_use != before:
+            self._table_dev = None
+
+    def note_insert(self, slot: int, n_tokens: int) -> None:
+        """Allocate the admitted prompt's pages, mirror its length."""
+        self._ensure(slot, n_tokens)
+        self.host_len[slot] = n_tokens
+
+    def pre_decode(self, active: np.ndarray) -> None:
+        """Allocate any page the coming decode step writes into (each
+        active slot writes at position ``len``)."""
+        for s in np.flatnonzero(active):
+            self._ensure(s, int(self.host_len[s]) + 1)
+
+    def post_decode(self, active: np.ndarray) -> None:
+        self.host_len[active] += 1
+
+    def table(self) -> jnp.ndarray:
+        """Device copy of the page table, re-uploaded only when a table
+        entry actually changed (steady-state decode reuses it)."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.pool.table)
+        return self._table_dev
+
+    def row(self, slot: int) -> jnp.ndarray:
+        return jnp.asarray(self.pool.table[slot])
+
+    def stats(self, cache: Any, sa: Any) -> Dict[str, int]:
+        """Resident-cache accounting for the paged-vs-dense benchmark."""
+        total = sum(int(a.nbytes) for a in jax.tree.leaves(cache))
+        page_bytes = page_token_bytes(cache, sa) * self.page_size
+        dense_leaves = total - pool_bytes(cache, sa)
+        return {
+            "cache_bytes": total,
+            "page_size": self.page_size,
+            "num_pages": self.pool.num_pages,
+            "page_bytes": page_bytes,
+            "pages_in_use": self.pool.pages_in_use,
+            "peak_pages_in_use": self.pool.peak_pages_in_use,
+            "peak_kv_bytes_in_use":
+                dense_leaves + self.pool.peak_pages_in_use * page_bytes,
+        }
+
+
+class PagedEngineMixin:
+    """The slot-protocol paging hooks both serving engines share verbatim.
+
+    An engine mixes this in and maintains two attributes: ``_pager`` (a
+    :class:`HostPager`, or None when constructed dense) and
+    ``_paging_active`` (set by its ``init_slot_cache`` — False when the
+    family has no paging leaves and fell back to the dense layout), plus a
+    ``_stats_seq_axes()`` hook returning its per-leaf sequence-axis tree.
+    """
+
+    _pager: Optional[HostPager] = None
+    _paging_active: bool = False
+    _paged_insert_jit = None
+
+    def _stats_seq_axes(self):
+        raise NotImplementedError
+
+    def paged_insert(self, batched_cache, single_cache, slot: int,
+                     ba: Any, sa: Any, n_tokens: int):
+        """Admit one prefilled B=1 dense cache into the pool: allocate the
+        slot's pages, then scatter its page blocks through the (traced)
+        table row — one compiled program for every slot and assignment.
+        Callers wrap this in their mesh context where needed."""
+        self._pager.note_insert(slot, n_tokens)
+        if self._paged_insert_jit is None:
+            def insert(pcache, single, row, s):
+                return insert_tree(pcache, single, row, s, ba, sa)
+
+            self._paged_insert_jit = jax.jit(insert, donate_argnums=(0,))
+        return self._paged_insert_jit(batched_cache, single_cache,
+                                      self._pager.row(slot),
+                                      jnp.int32(slot))
+
+    def reserve_slot(self, slot: int, prompt_len: int, max_new: int) -> bool:
+        """Admission control: claim worst-case pages for a request.  Dense
+        slot caches always admit; a paged pool may ask the scheduler to
+        wait until running requests free pages."""
+        if not self._paging_active:
+            return True
+        return self._pager.try_reserve(slot, prompt_len, max_new)
+
+    def can_ever_admit(self, prompt_len: int, max_new: int) -> bool:
+        """False when the request exceeds the pool's STATIC capacity: no
+        amount of waiting for frees can help, so the scheduler rejects it
+        immediately instead of head-of-line blocking the queue."""
+        if not self._paging_active:
+            return True
+        return self._pager.can_ever_admit(prompt_len, max_new)
+
+    def free_slot(self, slot: int) -> None:
+        """Release a finished request's pages (no-op for the dense layout)."""
+        if self._paging_active:
+            self._pager.free(slot)
+
+    def cache_stats(self, cache: Any) -> Dict[str, int]:
+        """Resident-cache accounting for the paged-vs-dense benchmark.
+
+        ``cache_bytes`` is the allocation backing the slot cache;
+        ``peak_kv_bytes_in_use`` is what the pages actually held at peak
+        (== cache_bytes for the dense layout, where every slot pins
+        ``max_len`` positions whether it uses them or not).  NOTE these
+        measure the PERSISTENT cache state; the reference paged decode
+        step additionally materializes a transient dense view per dispatch
+        (module docstring) that a page-table-aware attention kernel would
+        eliminate.
+        """
+        if not self._paging_active:
+            total = sum(int(a.nbytes) for a in jax.tree.leaves(cache))
+            return {"cache_bytes": total, "peak_kv_bytes_in_use": total}
+        return self._pager.stats(cache, self._stats_seq_axes())
+
+
+# ----------------------------------------------------------------------------
+# Layout discovery (shape diffing, like slots.batch_axes)
+# ----------------------------------------------------------------------------
+def seq_axes(cache_a: Any, cache_b: Any, delta: int) -> Any:
+    """Per-leaf sequence-axis pytree; -1 where the leaf does not page.
+
+    ``cache_a``/``cache_b`` are the same family cache built with two
+    ``max_len`` values ``delta`` apart (ShapeDtypeStructs are fine).  A leaf
+    pages only if exactly one axis grew by exactly ``delta`` — ring buffers
+    capped at a window, recurrent state and ``len`` all stay dense (-1),
+    which is the recurrent families' no-op page table.
+    """
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) == 1 and b.shape[diffs[0]] - a.shape[diffs[0]] == delta:
+            return diffs[0]
+        return -1
+
+    return jax.tree.map(axis, cache_a, cache_b)
+
+
+def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
+              page_size: int) -> Any:
+    """Allocate the paged slot cache: pool layout for paging leaves, dense
+    ``(max_slots, ...)`` zeros for everything else.  Same pytree structure
+    as the dense cache, so engines keep one cache object either way."""
+    def leaf(a, b_ax, s_ax):
+        if s_ax < 0:
+            return jnp.zeros(a.shape, a.dtype)
+        rest = tuple(d for i, d in enumerate(a.shape) if i not in (b_ax, s_ax))
+        return jnp.zeros((num_pages, page_size) + rest, a.dtype)
+
+    return jax.tree.map(leaf, cache_shape, ba, sa)
+
+
+def pool_bytes(pcache: Any, sa: Any) -> int:
+    """Resident bytes of the pool leaves (the paged share of the cache)."""
+    sizes = jax.tree.map(lambda a, s_ax: int(a.nbytes) if s_ax >= 0 else 0,
+                         pcache, sa)
+    return sum(jax.tree.leaves(sizes))
+
+
+def page_token_bytes(pcache: Any, sa: Any) -> int:
+    """KV bytes per token summed over the paged leaves (page bytes / ps)."""
+    def per_tok(a, s_ax):
+        if s_ax < 0:
+            return 0
+        return int(math.prod(a.shape[2:])) * a.dtype.itemsize
+
+    sizes = jax.tree.map(per_tok, pcache, sa)
+    return sum(jax.tree.leaves(sizes))
+
+
+# ----------------------------------------------------------------------------
+# Traced page-table ops (fixed shapes, traced indices — compile once)
+# ----------------------------------------------------------------------------
+def gather_view(pool: jnp.ndarray, table: jnp.ndarray, b_ax: int,
+                s_ax: int) -> jnp.ndarray:
+    """Reassemble one paged leaf into its dense ``(..., B, ..., S, ...)``
+    view through the page table ``(B, P)``."""
+    B, P = table.shape
+    ps = pool.shape[1]
+    g = pool[table]                                    # (B, P, ps, *rest)
+    g = g.reshape((B, P * ps) + pool.shape[2:])        # (B, S, *rest)
+    return jnp.moveaxis(g, (0, 1), (b_ax, s_ax))
+
+
+def gather_tree(pcache: Any, table: jnp.ndarray, ba: Any, sa: Any) -> Any:
+    """Dense-view pytree: paged leaves gathered, dense leaves passed through.
+    The result is exactly the cache pytree the family decode_step expects."""
+    return jax.tree.map(
+        lambda p, b_ax, s_ax: p if s_ax < 0
+        else gather_view(p, table, b_ax, s_ax),
+        pcache, ba, sa)
+
+
+def _take_token(leaf: jnp.ndarray, pos: jnp.ndarray, b_ax: int,
+                s_ax: int) -> jnp.ndarray:
+    """Slice per-slot position ``pos[b]`` along the seq axis -> (B, *rest)."""
+    B = pos.shape[0]
+    idx_shape = [1] * leaf.ndim
+    idx_shape[b_ax] = B
+    idx = pos.reshape(idx_shape).astype(jnp.int32)
+    tok = jnp.take_along_axis(leaf, idx, axis=s_ax)
+    tok = jnp.squeeze(tok, axis=s_ax)
+    return jnp.moveaxis(tok, b_ax - (1 if s_ax < b_ax else 0), 0)
+
+
+def scatter_token(pool: jnp.ndarray, table: jnp.ndarray,
+                  new_leaf: jnp.ndarray, pos: jnp.ndarray,
+                  write: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
+    """Write each active slot's token at ``pos[b]`` from the updated dense
+    view back into its page; inactive slots land on the scratch page."""
+    ps = pool.shape[1]
+    tok = _take_token(new_leaf, pos, b_ax, s_ax)       # (B, *rest)
+    page = jnp.take_along_axis(table, (pos // ps)[:, None], axis=1)[:, 0]
+    page = jnp.where(write, page, SCRATCH_PAGE)
+    return pool.at[page, pos % ps].set(tok.astype(pool.dtype))
+
+
+def scatter_token_tree(pcache: Any, new_view: Any, table: jnp.ndarray,
+                       pos: jnp.ndarray, write: jnp.ndarray, ba: Any,
+                       sa: Any) -> Any:
+    """Per-leaf post-step writeback: paged leaves get the one new token at
+    ``pos`` scattered into their page, dense leaves take the (already
+    slot-masked) updated view wholesale."""
+    return jax.tree.map(
+        lambda p, n, b_ax, s_ax: n if s_ax < 0
+        else scatter_token(p, table, n, pos, write, b_ax, s_ax),
+        pcache, new_view, ba, sa)
+
+
+def _dense_to_pages(leaf: jnp.ndarray, b_ax: int, s_ax: int,
+                    ps: int) -> jnp.ndarray:
+    """B=1 dense leaf -> (P, ps, *rest) page blocks."""
+    x = jnp.moveaxis(leaf, (b_ax, s_ax), (0, 1))       # (1, S, *rest)
+    S = x.shape[1]
+    return x[0].reshape((S // ps, ps) + x.shape[2:])
+
+
+def insert_tree(pcache: Any, single: Any, table_row: jnp.ndarray,
+                slot: jnp.ndarray, ba: Any, sa: Any) -> Any:
+    """Admit one prefilled B=1 dense cache: paged leaves scatter their page
+    blocks to the slot's physical pages (excess logical pages hit scratch),
+    dense leaves do the ordinary slot insert.  ``table_row``/``slot`` are
+    traced — ONE compiled program covers every slot and page assignment."""
+    def leaf(p, s, b_ax, s_ax):
+        if s_ax < 0:
+            return jax.lax.dynamic_update_slice_in_dim(
+                p, s.astype(p.dtype), slot, axis=b_ax)
+        blocks = _dense_to_pages(s, b_ax, s_ax, p.shape[1])
+        return p.at[table_row].set(blocks.astype(p.dtype))
+
+    return jax.tree.map(leaf, pcache, single, ba, sa)

@@ -6,10 +6,11 @@ the host can multiplex many streams over one immutable datapath; this module
 is that host.  It keeps ONE persistent jitted batched decode step alive and
 feeds it from a fixed ``(max_slots, ...)`` slot cache:
 
-  admit ──> bucketed B=1 prefill ──> insert_slot (donated, traced index)
+  admit ──> reserve pages ──> prefill (whole or CHUNKED) ──> insert_slot
     │                                         │
-    └── free slot <── EOS / max_new <── masked batched decode (1 dispatch
-                                            per token for ALL active slots)
+    └── free slot + pages <── EOS / max_new <── masked batched decode
+                                               (1 dispatch per token for
+                                                ALL active slots)
 
 Slot lifecycle (DESIGN.md §4): a finished request frees its slot in place —
 no reallocation, no shape change — and the next pending request is prefilled
@@ -18,13 +19,24 @@ shape is a power-of-two bucket (serve/slots.py), so after warmup the steady
 state dispatches exactly one fixed-shape program per token and NEVER
 recompiles (asserted with a compile counter in benchmarks/serve_bench.py).
 
+``prefill_chunk=C`` enables *chunked prefill* (DESIGN.md §5): a prompt body
+is fed as fixed-width-C chunks, AT MOST ONE chunk per loop iteration, so a
+long prompt adds bounded latency to each batched decode step instead of
+head-of-line-blocking every decoding slot with a monolithic prefill.
+
 Works with any engine exposing the slot protocol (``init_slot_cache`` /
-``prefill_slot`` / ``insert_slot`` / ``decode_slots`` / ``meter_tokens``):
+``prefill_slot`` / ``insert_slot`` / ``decode_slots`` / ``meter_tokens``,
+plus the optional paging hooks ``reserve_slot`` / ``free_slot`` and the
+chunked-prefill pair ``new_request_cache`` / ``prefill_chunk_slot``):
 serve/engine.py (all text families) and serve/splitbrain_engine.py (the
-paper's LM configs).  TrafficMeter accounting stays byte-exact per *active*
-token: a request admitted at T0 and stopped after g tokens crosses the
-boundary exactly (T0 - 1 + g) times, the same count the fused one-request
-``generate()`` replays — that equality is a test (tests/test_scheduler.py).
+paper's LM configs).  With a paged engine (``page_size=...``), admission
+additionally reserves worst-case KV pages and EOS returns them to the
+shared pool, so resident KV bytes track live tokens (DESIGN.md §5).
+
+TrafficMeter accounting stays byte-exact per *active* token: a request
+admitted at T0 and stopped after g tokens crosses the boundary exactly
+(T0 - 1 + g) times, the same count the fused one-request ``generate()``
+replays — that equality is a test (tests/test_scheduler.py).
 """
 from __future__ import annotations
 
@@ -35,7 +47,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["Request", "RequestResult", "ContinuousBatchingScheduler"]
+__all__ = ["Request", "RequestResult", "RejectedRequest",
+           "ContinuousBatchingScheduler"]
 
 
 @dataclasses.dataclass
@@ -57,9 +70,26 @@ class RequestResult:
 
 
 @dataclasses.dataclass
+class RejectedRequest:
+    uid: int
+    reason: str
+
+
+@dataclasses.dataclass
 class _SlotState:
     req: Request
     tokens: List[int]
+    admitted_s: float
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """A request whose prompt is being fed chunk-by-chunk into a B=1 cache
+    (the slot is held but inactive until the last chunk is inserted)."""
+    slot: int
+    req: Request
+    cache: Any
+    consumed: int
     admitted_s: float
 
 
@@ -70,61 +100,188 @@ class ContinuousBatchingScheduler:
     (Poisson-arrival benchmarking); ``realtime=False`` treats arrivals as an
     admission ORDER only and admits as fast as slots free up (deterministic,
     used by the parity tests).
+
+    ``prefill_chunk=C`` feeds prompt bodies as width-C chunks interleaved
+    with decode steps (at most one chunk per iteration).  C must divide the
+    engine's ``max_len``.  ``max_prefill_jobs`` bounds how many in-flight
+    chunked prefills may exist at once — each holds a dense B=1 request
+    cache until insertion, so the cap also bounds that resident memory
+    (1/max_slots of the dense slot cache per job).
     """
 
     def __init__(self, engine, max_slots: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 max_prefill_jobs: int = 2):
         self.engine = engine
         self.max_slots = int(max_slots)
         self.eos_id = eos_id
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be a positive chunk width, "
+                f"got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        if max_prefill_jobs < 1:
+            raise ValueError(
+                f"max_prefill_jobs must be >= 1, got {max_prefill_jobs}")
+        self.max_prefill_jobs = int(max_prefill_jobs)
         self.cache = None
 
     def warmup(self, prompt_len: int = 4, max_new: int = 2) -> None:
-        """Compile the steady-state programs (prefill bucket, insert, slot
-        step) before timing starts; leaves the TrafficMeter untouched."""
+        """Compile the steady-state programs (prefill bucket / chunk,
+        insert, slot step) before timing starts; leaves the TrafficMeter
+        untouched."""
         prompt = np.ones((prompt_len,), np.int32)
         req = Request(uid=-1, prompt=prompt, max_new=max_new)
         self.run([req])
         self.engine.meter.reset()
 
+    # ------------------------------------------------------------- admission
+    def _validate(self, requests: List[Request]):
+        """Per-request validation: oversized or empty requests are rejected
+        individually (with a readable reason) instead of aborting the whole
+        batch; the survivors are served normally."""
+        ok: List[Request] = []
+        rejected: List[RejectedRequest] = []
+        max_len = self.engine.max_len
+        for r in requests:
+            T0 = len(r.prompt)
+            if T0 < 1:
+                rejected.append(RejectedRequest(
+                    r.uid, "empty prompt: a request needs at least one "
+                           "token to seed decoding"))
+            elif r.max_new < 1:
+                rejected.append(RejectedRequest(
+                    r.uid, f"max_new={r.max_new} asks for no output tokens"))
+            elif T0 - 1 + r.max_new > max_len:
+                rejected.append(RejectedRequest(
+                    r.uid,
+                    f"request does not fit the cache: prompt_len={T0} + "
+                    f"max_new={r.max_new} needs {T0 - 1 + r.max_new} "
+                    f"positions but max_len={max_len}"))
+            else:
+                ok.append(r)
+        return ok, rejected
+
+    # ------------------------------------------------------------ serve loop
     def run(self, requests: List[Request],
             realtime: bool = False) -> Dict[str, Any]:
-        """Serve every request to completion; returns results + loop stats."""
+        """Serve every request to completion; returns results + loop stats.
+
+        ``wall_s`` includes realtime arrival sleeps; ``busy_s`` counts only
+        time spent doing work, and both tokens/s figures are reported so an
+        idle-heavy Poisson run can't masquerade as an efficient one.
+        """
         eng = self.engine
         n_slots = self.max_slots
-        for r in requests:
-            assert len(r.prompt) - 1 + r.max_new <= eng.max_len, \
-                (r.uid, len(r.prompt), r.max_new, eng.max_len)
-        pending = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        chunk = self.prefill_chunk
+        reqs, rejected = self._validate(requests)
+        pending = deque(sorted(reqs, key=lambda r: (r.arrival_s, r.uid)))
         cache = eng.init_slot_cache(n_slots)
         tokens = np.zeros((n_slots,), np.int32)
         active = np.zeros((n_slots,), bool)
         states: Dict[int, _SlotState] = {}
+        prefilling: deque = deque()           # _PrefillJob FIFO
         free = list(range(n_slots - 1, -1, -1))
         results: List[RequestResult] = []
         steps = 0
         decoded_tokens = 0
         prefill_tokens = 0
+        slept_s = 0.0
         t_start = time.perf_counter()
 
         def now() -> float:
             return time.perf_counter() - t_start
 
-        while pending or active.any():
-            # ---- admit: prefill new requests into free slots mid-flight
+        def in_flight() -> bool:
+            return bool(states) or bool(prefilling)
+
+        def start(req: Request, slot: int) -> None:
+            nonlocal cache, prefill_tokens
+            body = len(req.prompt) - 1
+            if chunk is not None and body > 0:
+                prefilling.append(_PrefillJob(
+                    slot, req, eng.new_request_cache(), 0, now()))
+                return
+            slot_cache, tok = eng.prefill_slot(req.prompt)
+            cache = eng.insert_slot(cache, slot_cache, slot)
+            prefill_tokens += body
+            tokens[slot] = tok
+            active[slot] = True
+            states[slot] = _SlotState(req, [], now())
+
+        def finish(slot: int, st: _SlotState) -> None:
+            results.append(RequestResult(
+                uid=st.req.uid,
+                tokens=np.asarray(st.tokens, np.int32),
+                gen_len=len(st.tokens),
+                prompt_len=len(st.req.prompt),
+                admitted_s=st.admitted_s,
+                finished_s=now()))
+            active[slot] = False
+            free.append(slot)
+            del states[slot]
+            if hasattr(eng, "free_slot"):
+                eng.free_slot(slot)
+
+        def reject_pool(req: Request) -> None:
+            pending.popleft()
+            rejected.append(RejectedRequest(
+                req.uid,
+                "request does not fit the KV page pool even with every "
+                f"slot idle (prompt_len={len(req.prompt)}, "
+                f"max_new={req.max_new})"))
+
+        while pending or in_flight():
+            # ---- admit: reserve pages + start prefill into free slots
             while free and pending and (not realtime
                                         or pending[0].arrival_s <= now()):
-                req = pending.popleft()
-                slot = free.pop()
-                slot_cache, tok = eng.prefill_slot(req.prompt)
-                cache = eng.insert_slot(cache, slot_cache, slot)
-                prefill_tokens += len(req.prompt) - 1
-                tokens[slot] = tok
-                active[slot] = True
-                states[slot] = _SlotState(req, [], now())
+                req = pending[0]
+                slot = free[-1]
+                if (chunk is not None and len(req.prompt) > 1
+                        and len(prefilling) >= self.max_prefill_jobs):
+                    break   # bound the resident B=1 prefill caches
+                if hasattr(eng, "can_ever_admit") and not eng.can_ever_admit(
+                        len(req.prompt), req.max_new):
+                    # statically impossible (exceeds the pool itself):
+                    # reject NOW instead of head-of-line blocking the
+                    # queue behind a request no amount of frees can admit
+                    reject_pool(req)
+                    continue
+                if hasattr(eng, "reserve_slot") and not eng.reserve_slot(
+                        slot, len(req.prompt), req.max_new):
+                    if not in_flight():
+                        # backstop (engines without can_ever_admit): an
+                        # idle pool that still refuses can never admit
+                        reject_pool(req)
+                        continue
+                    break                 # wait for running requests to free
+                pending.popleft()
+                free.pop()
+                start(req, slot)
+            # ---- chunked prefill: at most ONE chunk per iteration, so a
+            #      long prompt adds bounded latency per decode step
+            if prefilling:
+                job = prefilling[0]
+                body = len(job.req.prompt) - 1
+                w = min(chunk, body - job.consumed)
+                buf = np.zeros((chunk,), np.int32)
+                buf[:w] = job.req.prompt[job.consumed:job.consumed + w]
+                job.cache = eng.prefill_chunk_slot(job.cache, buf, w)
+                job.consumed += w
+                if job.consumed == body:
+                    prefilling.popleft()
+                    cache = eng.insert_slot(cache, job.cache, job.slot)
+                    prefill_tokens += body
+                    tokens[job.slot] = int(job.req.prompt[-1])
+                    active[job.slot] = True
+                    states[job.slot] = _SlotState(job.req, [],
+                                                  job.admitted_s)
             if not active.any():
-                if realtime and pending:
+                if not prefilling and realtime and pending:
+                    t0 = time.perf_counter()
                     time.sleep(max(0.0, pending[0].arrival_s - now()))
+                    slept_s += time.perf_counter() - t0
                 continue
             # ---- one masked batched decode step for every active stream
             n_active = int(active.sum())
@@ -139,20 +296,12 @@ class ContinuousBatchingScheduler:
                 done = (len(st.tokens) >= st.req.max_new
                         or (self.eos_id is not None and tok == self.eos_id))
                 if done:
-                    results.append(RequestResult(
-                        uid=st.req.uid,
-                        tokens=np.asarray(st.tokens, np.int32),
-                        gen_len=len(st.tokens),
-                        prompt_len=len(st.req.prompt),
-                        admitted_s=st.admitted_s,
-                        finished_s=now()))
-                    active[slot] = False
-                    free.append(slot)
-                    del states[slot]
+                    finish(slot, st)
                 else:
                     tokens[slot] = tok
 
         wall_s = now()
+        busy_s = wall_s - slept_s
         # Boundary accounting, replayed ONCE per run so the steady-state
         # loop's meter log stays O(1): only active slots ever cross, so the
         # total is exactly sum over requests of (T0 - 1 + gen) tokens —
@@ -162,9 +311,16 @@ class ContinuousBatchingScheduler:
         results.sort(key=lambda r: r.uid)
         return {
             "results": results,
+            "rejected": rejected,
             "steps": steps,
             "decoded_tokens": decoded_tokens,
             "wall_s": wall_s,
+            "busy_s": busy_s,
+            "slept_s": slept_s,
             "tokens_per_s": decoded_tokens / wall_s if wall_s else 0.0,
             "requests_per_s": len(results) / wall_s if wall_s else 0.0,
+            "tokens_per_s_busy":
+                decoded_tokens / busy_s if busy_s else 0.0,
+            "requests_per_s_busy":
+                len(results) / busy_s if busy_s else 0.0,
         }

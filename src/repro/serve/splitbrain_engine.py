@@ -32,7 +32,7 @@ production serving path for all 10 archs is serve/engine.py.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,7 @@ from repro.core.splitbrain import TrafficMeter, TrafficModel
 from repro.kernels import ops
 from repro.models import api
 from repro.models import layers as L
+from repro.serve import pages as pages_mod
 from repro.serve import slots as slots_mod
 
 
@@ -55,12 +56,13 @@ def _stack_layers(tree, num_layers: int):
     return jax.tree.map(lambda a: a.reshape((num_layers,) + a.shape[2:]), tree)
 
 
-class SplitBrainEngine:
+class SplitBrainEngine(pages_mod.PagedEngineMixin):
     """Greedy decoding with an explicit host/device boundary."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
                  quantize: bool = True, jit: bool = True,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         assert cfg.family == "lm" and len(cfg.layer_pattern) == 1, \
             "split-brain reference engine covers the paper's LM configs"
         assert not cfg.moe, "split-brain reference engine covers dense FFNs"
@@ -101,6 +103,13 @@ class SplitBrainEngine:
         self._prefill_jit: Dict[int, Any] = {}   # keyed by bucket width
         self._slot_step = None
         self._slot_insert = None
+        # paged slot cache (page_size=None keeps the dense slot layout)
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self._pager = (pages_mod.HostPager(page_size, num_pages, max_len)
+                       if page_size is not None else None)
+        self._paging_active = self._pager is not None   # k/v always page
+        self._paged_step = None
 
     # ------------------------------------------------------------- device ops
     # The eager reference path: each helper registers its boundary crossing
@@ -323,8 +332,11 @@ class SplitBrainEngine:
         """
         prompts = jnp.asarray(prompts, jnp.int32)
         B, T0 = prompts.shape
-        assert T0 - 1 + max_new <= self.max_len, \
-            (T0 - 1 + max_new, self.max_len)
+        if T0 - 1 + max_new > self.max_len:
+            raise ValueError(
+                f"request does not fit the cache: prompt_len={T0} + "
+                f"max_new={max_new} needs {T0 - 1 + max_new} positions but "
+                f"max_len={self.max_len}")
         if not self.jit:
             return self._generate_stepwise(prompts, max_new, eos_id)
         Pb = slots_mod.bucket(T0)
@@ -413,11 +425,47 @@ class SplitBrainEngine:
 
     # ---------------------------------------------------------- slot protocol
     # Consumed by serve/scheduler.py: the stacked cache doubles as a slot
-    # cache — slot i is batch row i, at its own ragged position.
+    # cache — slot i is batch row i, at its own ragged position.  With
+    # ``page_size`` set, the (L, B, Hkv, S, hd) K/V leaves instead live in a
+    # shared page pool behind a host-owned page table (serve/pages.py).
     _SLOT_AXES = {"k": 1, "v": 1, "len": 0}
+    _SEQ_AXES = {"k": 3, "v": 3, "len": -1}
 
     def init_slot_cache(self, n_slots: int) -> Dict[str, Any]:
-        return self.init_cache(n_slots)
+        if not self._paging_active:
+            return self.init_cache(n_slots)
+        pool = self._pager.reset(n_slots)
+        shape = jax.eval_shape(lambda: self.init_cache(n_slots))
+        return pages_mod.make_pool(shape, self._SLOT_AXES, self._SEQ_AXES,
+                                   pool.num_pages, self.page_size)
+
+    # reserve_slot / can_ever_admit / free_slot / cache_stats come from
+    # pages_mod.PagedEngineMixin.
+    def _stats_seq_axes(self):
+        return self._SEQ_AXES
+
+    def new_request_cache(self) -> Dict[str, Any]:
+        """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
+        return self.init_cache(1)
+
+    def prefill_chunk_slot(self, cache: Dict[str, Any], chunk: np.ndarray,
+                           true_w: int) -> Dict[str, Any]:
+        """Advance a B=1 request cache by one right-padded prompt chunk.
+
+        Reuses the bucketed prefill program (it scans the split-brain token
+        step from WHATEVER state the cache is in, freezing past
+        ``true_w``), so chunked prefill adds zero new compiled programs
+        beyond the one chunk width.
+        """
+        chunk = np.asarray(chunk, np.int32)
+        W = chunk.shape[0]
+        pages_mod.check_chunk_width(W, self.max_len)
+        if W not in self._prefill_jit:
+            self._prefill_jit[W] = self._prefill_fn(W)
+        k, v, ln = self._prefill_jit[W](
+            self._weights, cache["k"], cache["v"], cache["len"],
+            jnp.asarray(chunk[None, :]), jnp.int32(true_w))
+        return {"k": k, "v": v, "len": ln}
 
     def _prefill_fn(self, width: int):
         """Bucketed B=1 prompt prefill: scan the split-brain token step over
@@ -462,7 +510,13 @@ class SplitBrainEngine:
 
     def insert_slot(self, batched_cache, slot_cache, slot: int):
         """Write a prefilled request into slot ``slot`` (donated batched
-        buffers, traced index: ONE compiled program covers every slot)."""
+        buffers, traced index: ONE compiled program covers every slot).  On
+        the paged layout the host allocates the slot's pages first and the
+        B=1 K/V is scattered block-wise onto them."""
+        if self._paging_active:
+            n_tok = int(np.asarray(slot_cache["len"])[0])
+            return self.paged_insert(batched_cache, slot_cache, slot,
+                                     self._SLOT_AXES, self._SEQ_AXES, n_tok)
         if self._slot_insert is None:
             self._slot_insert = slots_mod.make_slot_insert(self._SLOT_AXES)
         return self._slot_insert(batched_cache, slot_cache, jnp.int32(slot))
@@ -470,7 +524,33 @@ class SplitBrainEngine:
     def decode_slots(self, cache: Dict[str, Any], tokens, active):
         """One masked batched split-brain token step: every slot computes,
         only ``active`` slots advance (K/V and ``len`` frozen elsewhere).
-        Fixed (max_slots, ...) shapes — zero recompiles in steady state."""
+        Fixed (max_slots, ...) shapes — zero recompiles in steady state.
+        Paged layout: host allocates the page position ``len`` falls in,
+        the jitted step gathers K/V through the traced page table, runs the
+        same token step, and scatters back one token per active slot."""
+        if self._paging_active:
+            act = np.asarray(active, bool)
+            self._pager.pre_decode(act)
+            if self._paged_step is None:
+                ba, sa = self._SLOT_AXES, self._SEQ_AXES
+
+                def paged_step(weights, pcache, table, tok, act_m):
+                    view = pages_mod.gather_tree(pcache, table, ba, sa)
+                    pos = view["len"]
+                    nxt, _, k2, v2, ln2 = self._token_step(
+                        weights, view["k"], view["v"], pos, tok)
+                    new = {"k": k2, "v": v2,
+                           "len": jnp.where(act_m, ln2, pos)}
+                    pc = pages_mod.scatter_token_tree(
+                        pcache, new, table, pos, act_m, ba, sa)
+                    return nxt, pc
+
+                self._paged_step = jax.jit(paged_step, donate_argnums=(1,))
+            nxt, pc = self._paged_step(
+                self._weights, cache, self._pager.table(),
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
+            self._pager.post_decode(act)
+            return nxt, pc
         if self._slot_step is None:
             def slot_step(weights, k, v, ln, tok, active):
                 nxt, _, k2, v2, ln2 = self._token_step(weights, k, v, ln, tok)

@@ -1,0 +1,149 @@
+"""Paged KV-cache plumbing (serve/pages.py): host allocator invariants,
+sequence-axis discovery, and the gather/scatter page-table ops that the
+paged slot protocol is built from."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import pages
+
+
+# ----------------------------------------------------------------- PagePool
+def test_page_pool_alloc_free_and_peak():
+    pool = pages.PagePool(num_pages=9, page_size=4, n_slots=3, slot_pages=4)
+    assert pool.capacity == 8                     # page 0 is scratch
+    assert pool.try_reserve(0, 10)                # 3 pages worst case
+    assert pool.try_reserve(1, 16)                # 4 pages
+    pool.ensure(0, 5)                             # 2 pages resident
+    pool.ensure(1, 16)                            # 4 pages resident
+    assert pool.pages_in_use == 6
+    assert pool.peak_pages_in_use == 6
+    # scratch page never handed out, tables point at real pages
+    assert all(p != pages.SCRATCH_PAGE for p in pool.table[0][:2])
+    assert all(p == pages.SCRATCH_PAGE for p in pool.table[0][2:])
+    pool.free_slot(1)
+    assert pool.pages_in_use == 2
+    assert pool.peak_pages_in_use == 6            # peak is sticky
+    assert pool.total_reserved == 3
+    # freed pages are reusable; a request longer than one slot's page
+    # table is refused outright
+    assert not pool.try_reserve(1, 20)            # 5 pages > slot_pages
+    assert pool.try_reserve(1, 14)                # 4 pages fit again
+    pool.ensure(1, 14)
+    assert pool.pages_in_use == 6
+
+
+def test_page_pool_reservation_admission_control():
+    pool = pages.PagePool(num_pages=5, page_size=4, n_slots=2, slot_pages=4)
+    assert pool.try_reserve(0, 12)                # 3 of 4 pages
+    assert not pool.try_reserve(1, 8)             # 2 more would overcommit
+    assert pool.try_reserve(1, 4)                 # 1 fits exactly
+    pool.free_slot(0)
+    assert pool.try_reserve(0, 12)                # reservation returned
+
+
+def test_page_pool_rejects_degenerate_sizes():
+    with pytest.raises(ValueError):
+        pages.PagePool(num_pages=1, page_size=4, n_slots=1, slot_pages=1)
+
+
+# ---------------------------------------------------- layout discovery
+def test_seq_axes_discovery_lm_vs_recurrent():
+    """KV leaves page (their S axis scales with max_len); recurrent state,
+    ring buffers and ``len`` stay dense — the no-op page table."""
+    lm = get_config("stablelm-1.6b").reduced()
+    a = jax.eval_shape(lambda: api.init_cache(lm, 2, 16))
+    b = jax.eval_shape(lambda: api.init_cache(lm, 2, 24))
+    sa = pages.seq_axes(a, b, 8)
+    assert all(ax == 4 for ax in jax.tree.leaves(sa["k"]))
+    assert all(ax == 4 for ax in jax.tree.leaves(sa["v"]))
+    assert sa["len"] == -1
+
+    rwkv = get_config("rwkv6-7b").reduced()
+    a = jax.eval_shape(lambda: api.init_cache(rwkv, 2, 16))
+    b = jax.eval_shape(lambda: api.init_cache(rwkv, 2, 24))
+    assert all(ax == -1 for ax in jax.tree.leaves(
+        pages.seq_axes(a, b, 8)))
+
+
+# ------------------------------------------------- gather / scatter ops
+def _toy_pool(B=3, S=8, ps=4, extra=2, num_pages=2 * 3 * 2 + 1):
+    """One leaf shaped like a small stacked KV cache: (L, B, Hkv, S, hd)
+    pattern collapsed to (extra, B, S) with ba=1, sa=2."""
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal((extra, B, S)).astype(np.float32)
+    pool = np.zeros((num_pages, ps, extra), np.float32)
+    return dense, pool
+
+
+def test_insert_gather_roundtrip_and_scratch_isolation():
+    ba, sa, ps = 1, 2, 4
+    dense, pool = _toy_pool()
+    extra, B, S = dense.shape
+    P = S // ps
+    host = pages.PagePool(pool.shape[0], ps, n_slots=B, slot_pages=P)
+    pool = jnp.asarray(pool)
+    # insert each row as a B=1 single cache with a full page table
+    for b in range(B):
+        assert host.try_reserve(b, S)
+        host.ensure(b, S)
+        single = jnp.asarray(dense[:, b:b + 1, :])
+        pool = pages.insert_tree(pool, single, jnp.asarray(host.table[b]),
+                                 jnp.int32(b), ba, sa)
+    table = jnp.asarray(host.table)
+    view = pages.gather_tree(pool, table, ba, sa)
+    np.testing.assert_array_equal(np.asarray(view), dense)
+
+    # scatter one token per slot at ragged positions; only active slots
+    # may touch real pages — the inactive write lands on scratch
+    pos = jnp.asarray([1, 5, 7], jnp.int32)
+    write = jnp.asarray([True, False, True])
+    new = jnp.asarray(dense + 100.0)
+    pool2 = pages.scatter_token_tree(pool, new, table, pos, write, ba, sa)
+    view2 = np.asarray(pages.gather_tree(pool2, table, ba, sa))
+    expect = dense.copy()
+    expect[:, 0, 1] += 100.0
+    expect[:, 2, 7] += 100.0                      # slot 1 frozen (inactive)
+    np.testing.assert_array_equal(view2, expect)
+
+
+def test_insert_excess_logical_pages_hit_scratch_only():
+    """A short prompt's insert writes its full fixed page count, but the
+    excess blocks must land on the scratch page, not on other slots."""
+    ba, sa, ps = 1, 2, 4
+    dense, pool = _toy_pool()
+    extra, B, S = dense.shape
+    P = S // ps
+    host = pages.PagePool(pool.shape[0], ps, n_slots=B, slot_pages=P)
+    pool = jnp.asarray(pool)
+    # slot 0 owns all its pages and holds known data
+    assert host.try_reserve(0, S)
+    host.ensure(0, S)
+    pool = pages.insert_tree(pool, jnp.asarray(dense[:, 0:1]),
+                             jnp.asarray(host.table[0]), jnp.int32(0),
+                             ba, sa)
+    before = np.asarray(pages.gather_view(pool, jnp.asarray(host.table[0:1]),
+                                          ba, sa))
+    # slot 1 inserts a 3-token prompt: 1 real page, 1 scratch block
+    assert host.try_reserve(1, 3)
+    host.ensure(1, 3)
+    pool = pages.insert_tree(pool, jnp.asarray(dense[:, 1:2]),
+                             jnp.asarray(host.table[1]), jnp.int32(1),
+                             ba, sa)
+    after = np.asarray(pages.gather_view(pool, jnp.asarray(host.table[0:1]),
+                                         ba, sa))
+    np.testing.assert_array_equal(after, before)
+    got = np.asarray(pages.gather_view(pool, jnp.asarray(host.table[1:2]),
+                                       ba, sa))
+    np.testing.assert_array_equal(got[:, :, :ps], dense[:, 1:2, :ps])
+
+
+def test_pool_byte_accounting():
+    dense, pool = _toy_pool()
+    pool = jnp.asarray(pool)
+    assert pages.pool_bytes(pool, 2) == pool.nbytes
+    assert pages.pool_bytes(pool, -1) == 0
+    assert pages.page_token_bytes(pool, 2) == pool.shape[2] * 4

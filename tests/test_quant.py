@@ -79,3 +79,22 @@ def test_activation_quant_roundtrip():
     q, s = quant.quantize_activations_int8(x)
     err = np.abs(np.asarray(q, np.float32) * np.asarray(s) - np.asarray(x))
     assert (err <= np.asarray(s) / 2 + 1e-6).all()
+
+
+def test_activation_quant_per_tensor_static_range():
+    """per_tensor=True models the paper's §V-C static-range device: ONE
+    scale for the whole tensor (broadcast row-shaped), still a bounded
+    roundtrip; the default stays per-row dynamic."""
+    x = _rand_w(7, shape=(4, 256), scale=3.0)
+    q, s = quant.quantize_activations_int8(x, per_tensor=True)
+    s_np = np.asarray(s)
+    assert s_np.shape == (4, 1)                  # broadcasts like per-row
+    assert np.unique(s_np).size == 1             # but is a single range
+    np.testing.assert_allclose(
+        float(s_np[0, 0]), float(np.abs(np.asarray(x)).max()) / 127.0,
+        rtol=1e-6)
+    err = np.abs(np.asarray(q, np.float32) * s_np - np.asarray(x))
+    assert (err <= s_np / 2 + 1e-6).all()
+    # per-row default gives row-wise distinct scales on ragged rows
+    _, s_row = quant.quantize_activations_int8(x)
+    assert np.unique(np.asarray(s_row)).size > 1
