@@ -1,37 +1,41 @@
-"""Continuous-batching serve benchmark: paged vs dense slot cache, vs the
-sequential-fused baseline.
+"""Continuous-batching serve benchmark: paged (in-place vs gather) vs dense
+slot cache, vs the sequential-fused baseline.
 
 Replays the same Poisson-arrival request trace (ragged prompt lengths AND
-ragged ``max_new``) through three serving disciplines:
+ragged ``max_new``) through four serving disciplines:
 
-  sequential — the PR-1 baseline: requests served one at a time, each as a
-               fused prefill + one-dispatch decode loop (fast per request,
-               but concurrent arrivals queue behind the running one),
-  continuous — serve/scheduler.py over the DENSE slot cache: every slot
-               pins max_len positions whether the request uses them or not,
-  paged      — the same scheduler over the paged slot cache
-               (serve/pages.py): KV lives in a shared page pool behind
-               per-slot page tables, allocated on demand and freed on EOS,
-               with chunked prefill interleaving prompt chunks between
-               decode steps.
+  sequential   — the PR-1 baseline: requests served one at a time, each as
+                 a fused prefill + one-dispatch decode loop (fast per
+                 request, but concurrent arrivals queue behind the running
+                 one),
+  continuous   — serve/scheduler.py over the DENSE slot cache: every slot
+                 pins max_len positions whether the request uses them or
+                 not,
+  paged_gather — the scheduler over the paged slot cache with the PR-3
+                 reference decode discipline: gather the dense view
+                 through the page table, run the family decode step,
+                 scatter one token back — an O(max_slots x max_len)
+                 dense-view TRANSIENT per step,
+  paged        — the same pool with the gather-free in-place discipline
+                 (DESIGN.md §6): attention walks pool[table] page-block-
+                 wise, ZERO transient bytes, O(live tokens) KV reads.
 
 Measures tokens/s, requests/s (wall AND busy — arrival sleeps are reported
 separately so idle-heavy traces can't inflate apparent efficiency), mean
-per-request latency, and the paged-memory claim: peak resident KV bytes of
-the PERSISTENT cache state (pages in use at peak x page bytes) vs the dense
-slot cache, gated at >= 2x on the ragged workload.  (The reference paged
-decode step additionally materializes a transient dense view per dispatch —
-serve/pages.py module docstring / DESIGN.md §5 — which a page-table-aware
-attention kernel would eliminate; the gate is about what admission and
-cache sizing reason over, the persistent pool.)  Also asserts the
-structural invariants:
+per-request latency, the paged-memory claim (peak resident KV bytes of the
+PERSISTENT cache state vs the dense slot cache, gated >= 2x on the ragged
+workload), and the per-step copy the in-place kernel eliminates:
+``gather_transient_bytes_per_step`` (gated == 0 for paged in-place) plus
+the metered host KV-read bytes per discipline (live pages only on the
+in-place path).  Also asserts the structural invariants:
 
-  * zero recompiles after warmup for BOTH cache layouts — counted with the
-    XLA backend-compile listener (serve/slots.py::CompileCounter),
+  * zero recompiles after warmup for ALL slot-cache disciplines — counted
+    with the XLA backend-compile listener (serve/slots.py::CompileCounter),
   * interface-traffic exactness — measured meter bytes over each continuous
     run == (sum over requests of T0-1+gen) * the analytical eq. 7-10
-    bytes/token, for the dense AND the paged engine,
-  * paged throughput within 10% of the dense scheduler.
+    bytes/token, for the dense AND both paged disciplines,
+  * paged in-place throughput >= paged gather (the copy was pure waste),
+    and paged within 10% of the dense scheduler.
 
 Emits BENCH_serve.json so future PRs have a throughput trajectory:
 
@@ -101,6 +105,7 @@ def _run_continuous(eng: ServeEngine, reqs: List[Request], max_slots: int,
                     prefill_chunk: Optional[int] = None) -> Dict[str, Any]:
     sched = ContinuousBatchingScheduler(eng, max_slots=max_slots,
                                         prefill_chunk=prefill_chunk)
+    kv0 = eng.meter.host_read_bytes
     out = sched.run(list(reqs), realtime=True)
     assert not out["rejected"], out["rejected"]
     lat = [res.finished_s - req.arrival_s
@@ -115,6 +120,12 @@ def _run_continuous(eng: ServeEngine, reqs: List[Request], max_slots: int,
             "requests_per_s_busy": out["requests_per_s_busy"],
             "mean_latency_s": float(np.mean(lat)),
             "steps": out["steps"],
+            # the per-step dense-view copy the in-place kernel eliminates,
+            # and the discipline's modeled host KV reads over the run
+            # (replayed accounting — kv_read_bytes_step — not a hw counter)
+            "gather_transient_bytes_per_step":
+                eng.gather_transient_bytes_per_step(),
+            "kv_read_bytes": eng.meter.host_read_bytes - kv0,
             "cache": eng.cache_stats(sched.cache)}
 
 
@@ -143,15 +154,24 @@ def bench_arch(arch: str, n_requests: int, max_new: int, max_slots: int,
     # always fits even with --slots 1
     num_pages = max(max_slots * slot_pages // 2, slot_pages) + 1
     dense = ServeEngine(cfg, params, max_len=max_len)
+    gather = ServeEngine(cfg, params, max_len=max_len, page_size=page_size,
+                         num_pages=num_pages, paged_attn="gather")
     paged = ServeEngine(cfg, params, max_len=max_len, page_size=page_size,
-                        num_pages=num_pages)
+                        num_pages=num_pages)          # in-place (default)
     reqs = _workload(cfg, n_requests, max_new, mean_gap_s)
+
+    # a family with no sequence-scaling leaves (rwkv) demotes BOTH paged
+    # engines to the identical dense fallback: measuring "gather" there
+    # would just re-time the same discipline and publish a noise ratio
+    will_page = paged.will_page()
 
     # warm every bucket all disciplines touch (compiles excluded from timing)
     warm = [dataclasses.replace(r, uid=-1 - i, arrival_s=0.0)
             for i, r in enumerate(reqs)]
     _run_sequential(dense, warm)
     _run_continuous(dense, warm, max_slots)
+    if will_page:
+        _run_continuous(gather, warm, max_slots, prefill_chunk)
     _run_continuous(paged, warm, max_slots, prefill_chunk)
 
     # each discipline is measured ``repeats`` times and the best steady-state
@@ -176,7 +196,22 @@ def bench_arch(arch: str, n_requests: int, max_new: int, max_slots: int,
         return best, recompiles, traffic
 
     cont, dense_recompiles, dense_traffic = measure(dense, None)
+    if will_page:
+        gat, gather_recompiles, gather_traffic = measure(gather,
+                                                         prefill_chunk)
+    else:
+        gat, gather_recompiles, gather_traffic = None, 0, {"exact": True}
     pag, paged_recompiles, paged_traffic = measure(paged, prefill_chunk)
+
+    # structural gates on the eliminated copy (checked via the FAIL/exit-1
+    # path in main(), not asserts, so a regression still writes the
+    # artifact): the in-place discipline must have NO dense-view transient
+    # and must read fewer host KV bytes than gather on a ragged workload
+    transient_ok = (pag["gather_transient_bytes_per_step"] == 0
+                    and (not will_page
+                         or gat["gather_transient_bytes_per_step"] > 0))
+    reads_ok = (not will_page
+                or pag["kv_read_bytes"] < gat["kv_read_bytes"])
 
     dense_bytes = cont["cache"]["cache_bytes"]
     paged_peak = pag["cache"]["peak_kv_bytes_in_use"]
@@ -192,21 +227,29 @@ def bench_arch(arch: str, n_requests: int, max_new: int, max_slots: int,
         "prefill_chunk": prefill_chunk,
         "sequential": seq,
         "continuous": cont,
+        "paged_gather": gat,
         "paged": pag,
         "requests_per_s_speedup": cont["requests_per_s"] / seq["requests_per_s"],
         "tokens_per_s_speedup": cont["tokens_per_s"] / seq["tokens_per_s"],
         "paged_vs_dense_requests_per_s":
             pag["requests_per_s"] / cont["requests_per_s"],
+        "paged_inplace_vs_gather_tokens_per_s":
+            (pag["tokens_per_s_busy"] / gat["tokens_per_s_busy"]
+             if will_page else None),
+        "paged_transient_eliminated": transient_ok,
+        "paged_inplace_reads_less": reads_ok,
         "dense_cache_bytes": dense_bytes,
         "paged_pool_bytes": pag["cache"]["cache_bytes"],
         "paged_peak_bytes_in_use": paged_peak,
         "paged_memory_saving": dense_bytes / paged_peak,
         "steady_state_recompiles": dense_recompiles,
         "paged_steady_state_recompiles": paged_recompiles,
+        "gather_steady_state_recompiles": gather_recompiles,
         "compile_counter_available": counter.available,
         "traffic_dense": dense_traffic,
         "traffic_paged": paged_traffic,
-        "traffic_exact": dense_traffic["exact"] and paged_traffic["exact"],
+        "traffic_exact": (dense_traffic["exact"] and paged_traffic["exact"]
+                          and gather_traffic["exact"]),
         "jit_caches": {"dense": dense.jit_cache_sizes(),
                        "paged": paged.jit_cache_sizes()},
     }
@@ -239,34 +282,50 @@ def main(argv=None) -> int:
                           args.mean_gap_ms / 1e3, overrides,
                           page_size=args.page_size,
                           prefill_chunk=args.prefill_chunk,
-                          repeats=1 if args.quick else 2) for a in archs]
+                          repeats=1 if args.quick else 3) for a in archs]
 
     # rwkv keeps dense recurrent state (no-op page table): the memory gate
     # only applies where the pool actually pages KV
     gate = 1.0 if args.quick else 2.0
     mem_gate = 1.0 if args.quick else 2.0
     rps_gate = 0.75 if args.quick else 0.9
+    # the in-place discipline does strictly less work than gather (no dense
+    # view copy, no scatter), and the gate only applies to configs that
+    # actually page, where that structural margin measures >10% (1.14x in
+    # the shipped artifact; the oracle's page loop is unrolled precisely so
+    # scan dispatch overhead can't eat it) — best-of-repeats absorbs the
+    # remaining noise; quick mode (sub-second walls) gets slack instead
+    inplace_gate = 0.9 if args.quick else 1.0
     summary = {
         r["config"]: {
             "requests_per_s_speedup": round(r["requests_per_s_speedup"], 2),
             "tokens_per_s_speedup": round(r["tokens_per_s_speedup"], 2),
             "paged_vs_dense_requests_per_s":
                 round(r["paged_vs_dense_requests_per_s"], 2),
+            "paged_inplace_vs_gather_tokens_per_s":
+                (round(r["paged_inplace_vs_gather_tokens_per_s"], 2)
+                 if r["paged_inplace_vs_gather_tokens_per_s"] is not None
+                 else None),   # None: family never pages (dense fallback)
             "paged_memory_saving": round(r["paged_memory_saving"], 2),
+            "gather_transient_bytes_per_step":
+                r["paged"]["gather_transient_bytes_per_step"],
             "zero_steady_state_recompiles":
                 r["steady_state_recompiles"] == 0
-                and r["paged_steady_state_recompiles"] == 0,
+                and r["paged_steady_state_recompiles"] == 0
+                and r["gather_steady_state_recompiles"] == 0,
             "traffic_exact": r["traffic_exact"],
         } for r in results
     }
     report = {
-        "schema": "serve_bench/v2",
+        "schema": "serve_bench/v3",
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "quick": args.quick,
         "gate_requests_per_s_speedup": gate,
         "gate_paged_memory_saving": mem_gate,
         "gate_paged_vs_dense_requests_per_s": rps_gate,
+        "gate_paged_inplace_vs_gather_tokens_per_s": inplace_gate,
+        "gate_paged_transient_bytes": 0,
         "results": results,
         "summary": summary,
     }
@@ -277,20 +336,27 @@ def main(argv=None) -> int:
     print(f"wrote {args.out}")
 
     def paged_ok(r):
+        if not (r["paged_transient_eliminated"]
+                and r["paged_inplace_reads_less"]):
+            return False
         if "num_pages" not in r["paged"]["cache"]:
             return True               # family never paged (dense fallback)
         return (r["paged_memory_saving"] >= mem_gate
-                and r["paged_vs_dense_requests_per_s"] >= rps_gate)
+                and r["paged_vs_dense_requests_per_s"] >= rps_gate
+                and r["paged_inplace_vs_gather_tokens_per_s"] >= inplace_gate)
 
     ok = all(r["requests_per_s_speedup"] >= gate
              and r["steady_state_recompiles"] == 0
              and r["paged_steady_state_recompiles"] == 0
+             and r["gather_steady_state_recompiles"] == 0
              and r["traffic_exact"]
              and paged_ok(r) for r in results)
     if not ok:
         print(f"FAIL: continuous < {gate}x sequential requests/s, paged < "
               f"{mem_gate}x memory saving, paged < {rps_gate}x dense "
-              "requests/s, steady-state recompile, or traffic mismatch",
+              f"requests/s, paged in-place < {inplace_gate}x gather "
+              "tokens/s, nonzero dense-view transient, in-place KV reads "
+              ">= gather, steady-state recompile, or traffic mismatch",
               file=sys.stderr)
     return 0 if ok else 1
 

@@ -128,12 +128,27 @@ class TrafficModel:
 
 
 class TrafficMeter:
-    """Runtime byte counter for tensors crossing the host/device boundary."""
+    """Runtime byte counter for tensors crossing the host/device boundary.
+
+    A third, separately-tracked channel — ``host_read`` — counts HOST-LOCAL
+    memory reads that never cross the interface (the KV-cache bytes host
+    attention touches per decode step).  Like the rest of the meter these
+    are replayed accounting entries, not hardware counters: each serve
+    discipline logs its read MODEL (see
+    ``serve/pages.py::PagedEngineMixin.kv_read_bytes_step``).  Eq. 7-10 do
+    not include them, so they are excluded from :meth:`measured_bytes` and
+    the exactness assertions; they exist so the paged serve path can report
+    that its kernel reads only LIVE-page KV bytes per token, where the
+    gather (dense-view) discipline reads ``max_slots x max_len`` worth
+    regardless of occupancy.
+    """
 
     def __init__(self) -> None:
         self.device_to_host = 0
         self.host_to_device = 0
+        self.host_read_bytes = 0
         self.log: List[Tuple[str, str, int]] = []
+        self.host_log: List[Tuple[str, int]] = []
 
     @staticmethod
     def _nbytes(shape, act_bytes: int = ACT_BYTES) -> int:
@@ -148,6 +163,14 @@ class TrafficMeter:
         n = self._nbytes(shape, act_bytes)
         self.host_to_device += n
         self.log.append(("h2d", name, n))
+
+    def host_read(self, name: str, nbytes: int) -> None:
+        """Log host-local bytes read (no boundary crossing; see class doc).
+        Takes a byte count directly — these are real cache-dtype bytes, not
+        eq. 7-10 wire widths."""
+        n = int(nbytes)
+        self.host_read_bytes += n
+        self.host_log.append((name, n))
 
     @property
     def total(self) -> int:
@@ -174,4 +197,6 @@ class TrafficMeter:
     def reset(self) -> None:
         self.device_to_host = 0
         self.host_to_device = 0
+        self.host_read_bytes = 0
         self.log.clear()
+        self.host_log.clear()

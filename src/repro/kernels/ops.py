@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref
 from repro.kernels import rwkv_scan as _rwkv
 from repro.kernels import w4a8_matmul as _w4a8
@@ -66,6 +67,26 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
             return fn(q, k_cache, v_cache, valid)
     return ref.decode_attention(q, k_cache, v_cache, cache_len,
                                 window=window, softcap=softcap, scale=scale)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           use_pallas: Optional[bool] = None):
+    """Gather-free decode attention THROUGH the page table: no dense-view
+    transient (serve/pages.py::gather_view) is ever materialized.  The
+    Pallas kernel walks ``pool[table]`` page-block-wise (flash-decode over
+    the split-K page axis, DESIGN.md §6); the reference is a ``lax.scan``
+    over pages with the same online-softmax accumulation."""
+    if _dispatch(use_pallas):
+        return _pa.paged_decode_attention(q, k_pool, v_pool, page_table,
+                                          cache_len, window=window,
+                                          softcap=softcap, scale=scale,
+                                          interpret=not _ON_TPU)
+    return ref.paged_decode_attention(q, k_pool, v_pool, page_table,
+                                      cache_len, window=window,
+                                      softcap=softcap, scale=scale)
 
 
 def chunk_attention(q, k_cache, v_cache, q_pos, *,

@@ -1,0 +1,156 @@
+"""Pallas TPU paged decode attention: flash-decode over the page pool.
+
+The gather-free counterpart of ``serve/pages.py::gather_view`` +
+``ref.decode_attention``: one decode query per slot attends to its KV
+directly THROUGH the page table, so the ``(B, max_len, ...)`` dense-view
+transient of the reference paged decode step never exists and steady-state
+HBM reads drop from O(max_len) to O(live tokens) per slot.
+
+Grid: ``(B, Hkv, P)`` — slots × kv-heads × page-blocks, with the page axis
+innermost ("arbitrary" semantics) as the split-K axis of a flash-decode
+online softmax: running max / denominator / accumulator live in VMEM
+scratch and are revisited across page steps.  The page table and the
+per-slot lengths ride in as **scalar-prefetch** operands
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps resolve
+``table[b, p]`` BEFORE the kernel body runs and the DMA engine fetches
+exactly one physical page per grid step — the paged analogue of
+``flash_attention.py``'s GQA-via-index-map trick (q is laid out
+``(B, Hkv, group, D)`` so every KV page is read once per kv head, never
+per q head).
+
+Pages past a slot's ``cache_len`` (and pages wholly below its sliding
+window) skip their compute with ``pl.when``.  For the dead TAIL the
+allocator's table entries additionally point at the scratch page, so even
+the prefetch touches only a single hot page; wholly-below-window pages
+are real allocated pages, so their grid steps still fetch one page each
+(compute-free — in the serving stack this case never arises, since
+window-capped cache leaves stay dense ring buffers and never page).
+Sliding-window and softcap semantics match ``flash_attention.py`` /
+``ref.decode_attention`` exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# renamed TPUCompilerParams -> CompilerParams across pallas releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: Optional[int],
+            softcap: Optional[float], ps: int, n_pages: int, group: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    start = p * ps
+    # a page is needed iff it overlaps [max(0, length - window), length);
+    # the overlap is never empty, so a computed block always has >= 1 valid
+    # position (no all-masked softmax corner)
+    needed = start < length
+    if window is not None:
+        needed = jnp.logical_and(needed, start + ps > length - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (group, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # (ps, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)     # (ps, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (group, ps), 1)
+        mask = pos < length
+        if window is not None:
+            mask &= pos > length - 1 - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
+        pexp = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + pexp.sum(-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "interpret"),
+)
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           cache_len: jnp.ndarray, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q (B, Hq, 1, D); pools (num_pages, page_size, Hkv, D);
+    page_table (B, P) int32 physical page ids; cache_len (B,) valid lengths.
+    Hq % Hkv == 0.  Token position t of slot b lives at
+    ``(page_table[b, t // page_size], t % page_size)``.
+    """
+    B, Hq, _, D = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    P = page_table.shape[1]
+    group = Hq // Hkv
+    s = scale if scale is not None else D ** -0.5
+    # GQA layout: the group dim rides inside the q/out block, so each KV
+    # page is fetched once per KV head (not once per q head)
+    qg = q[:, :, 0, :].reshape(B, Hkv, group, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # page_table, cache_len
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D),
+                         lambda b, h, p, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D),
+                               lambda b, h, p, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=s, window=window, softcap=softcap, ps=ps,
+            n_pages=P, group=group),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), jnp.asarray(cache_len, jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(B, Hq, 1, D)

@@ -190,6 +190,74 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
 
 
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           cache_len, *, window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-position attention computed THROUGH the page table.
+
+    The gather-free oracle: a ``lax.scan`` over the page-table columns with
+    flash-decode online-softmax accumulation — pages are the split-K axis.
+    Each step touches one ``(B, page_size, ...)`` block of the pool, so no
+    ``(B, S, ...)`` dense-view transient is ever materialized (the
+    memory-wall copy ``gather_view`` + :func:`decode_attention` pays).
+
+    q: (B, Hq, 1, D); pools: (num_pages, page_size, Hkv, D);
+    page_table: (B, P) physical page ids (unallocated entries may point at
+    the scratch page — masked positions never contribute); cache_len: (B,)
+    valid lengths.  Token position t of slot b lives at
+    ``(page_table[b, t // page_size], t % page_size)``.
+    """
+    B, Hq, _, D = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    P = page_table.shape[1]
+    group = Hq // Hkv
+    s = (scale if scale is not None else D ** -0.5)
+    qg = q[:, :, 0, :].reshape(B, Hkv, group, D).astype(jnp.float32)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+
+    def page_step(carry, inputs):
+        m, l, acc = carry
+        pi, pid = inputs                     # page column index, (B,) phys ids
+        kb = k_pool[pid].astype(jnp.float32)             # (B, ps, Hkv, D)
+        vb = v_pool[pid].astype(jnp.float32)
+        logits = jnp.einsum("bhgd,bshd->bhgs", qg, kb) * s
+        logits = _soft_cap(logits, softcap)
+        pos = pi * ps + jnp.arange(ps)                   # absolute positions
+        valid = pos[None, :] < cache_len[:, None]
+        if window is not None:
+            valid &= pos[None, :] > (cache_len[:, None] - 1 - window)
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        # all-masked-so-far rows (m_new still NEG_INF) contribute nothing:
+        # exp(NEG_INF - NEG_INF) would be 1, which for a cache_len of 0
+        # (every page masked) would average raw pool V rows instead of
+        # returning the Pallas kernel's zeros
+        live = m_new > NEG_INF
+        p = jnp.where(live[..., None], jnp.exp(logits - m_new[..., None]),
+                      0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhgs,bshd->bhgd", p, vb)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, D), jnp.float32)
+    # unroll the (short) page loop: straight-line per-page blocks keep the
+    # transient at O(B x page_size) while avoiding the sequential while-loop
+    # dispatch overhead that would otherwise lose to the one-shot gather on
+    # CPU; capped so a long table doesn't blow up compile time
+    (m, l, acc), _ = jax.lax.scan(
+        page_step, (m0, l0, a0),
+        (jnp.arange(P), page_table.T.astype(jnp.int32)),
+        unroll=min(P, 16))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
 def chunk_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                     v_cache: jnp.ndarray, q_pos: jnp.ndarray, *,
                     window: Optional[int] = None,

@@ -40,7 +40,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
     if shape.name == "long_500k" and not cfg.supports_long_context:
         return ("full-attention arch: 500k decode needs sub-quadratic "
-                "attention (DESIGN.md §6)")
+                "attention (DESIGN.md §7)")
     return None
 
 

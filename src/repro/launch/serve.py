@@ -48,6 +48,12 @@ def main(argv=None):
                          "(tokens per page; must divide max_len)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page-pool capacity (default: dense-equivalent)")
+    ap.add_argument("--paged-attn", choices=("inplace", "gather"),
+                    default="inplace",
+                    help="paged decode discipline: 'inplace' computes "
+                         "attention directly through the page table "
+                         "(gather-free, no dense-view transient); 'gather' "
+                         "keeps the dense-view fallback/oracle")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill width (interleaves prompt chunks "
                          "with decode steps; must divide max_len)")
@@ -73,7 +79,8 @@ def main(argv=None):
         max_len = pages.round_len(args.prompt_len + args.max_new + 1,
                                   args.page_size, args.prefill_chunk)
         eng = ServeEngine(cfg, params, max_len=max_len,
-                          page_size=args.page_size, num_pages=args.num_pages)
+                          page_size=args.page_size, num_pages=args.num_pages,
+                          paged_attn=args.paged_attn)
         lo = min(2, args.prompt_len)
         reqs = [Request(uid=i,
                         prompt=rng.integers(

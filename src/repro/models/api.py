@@ -41,6 +41,28 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
     return family_module(cfg).decode_step(params, cache, tokens, cfg)
 
 
+def paged_decode_step(params, cache, table, tokens, cfg: ModelConfig, *,
+                      write=None, seq_axes=None):
+    """One decode step computed directly through the page pool.
+
+    The gather-free serve path (DESIGN.md §6): ``cache`` is the paged slot
+    cache (pool leaves in the kernel-friendly layout of
+    ``serve/pages.py::make_pool``, dense leaves untouched), ``table`` the
+    (B, P) physical page table, ``write`` the active-slot mask (frozen
+    slots append to the scratch page and keep their dense leaves / ``len``).
+    ``seq_axes`` is the discovery pytree marking which leaves page.
+    Families whose caches never page (rwkv, and hymba/lm with every slot
+    window-capped) are served by the dense fallback and never reach here.
+    """
+    mod = family_module(cfg)
+    if not hasattr(mod, "paged_decode_step"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no paged decode entry point; its "
+            "caches should have fallen back to the dense slot layout")
+    return mod.paged_decode_step(params, cache, table, tokens, cfg,
+                                 write=write, seq_axes=seq_axes)
+
+
 def _prefill_fits(cache, prompt_len: int) -> bool:
     """True when every KV slot can hold the whole prompt as one block."""
     kv = cache.get("k") if isinstance(cache, dict) else None

@@ -5,7 +5,7 @@ plus a causal decoder with cross-attention.
 Split-brain: all enc/dec projections are device-side; the decoder KV cache,
 cross-attention and softmax are host-side.  Cross K/V are projected once at
 prefill (device) and live in the host cache thereafter — exactly the paper's
-"static weights vs dynamic state" split (DESIGN.md §6).
+"static weights vs dynamic state" split (DESIGN.md §7).
 """
 from __future__ import annotations
 

@@ -83,6 +83,37 @@ def _ssm_branch(p, x, cfg: ModelConfig, state=None):
     return L.linear(y, ssm_p["w_out"]), new_state
 
 
+def _embed_decode(params, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Shared decode preamble: embed one token per row -> (B, 1, d)."""
+    return params["embed"][tokens][:, None, :].astype(jnp.dtype(cfg.dtype))
+
+
+def _fuse_tail(p, x, xn, o, sstate, cfg: ModelConfig):
+    """Shared hybrid-head tail for both decode disciplines: attention-out
+    projection, SSM branch, per-branch norms + averaged fusion, MLP.  ONE
+    copy, so the dense and paged decode paths cannot drift apart on the
+    fusion math their token-identity contract depends on.
+    o: (B, Hq, 1, hd) -> (new x, new ssm state)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    attn_out = L.linear(
+        o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd),
+        p["attn"]["wo"])
+    ssm_out, new_state = _ssm_branch(p, xn, cfg, state=sstate)
+    fused = 0.5 * (L.rmsnorm(attn_out, p["ln_attn_out"], cfg.norm_eps)
+                   + L.rmsnorm(ssm_out, p["ln_ssm_out"], cfg.norm_eps))
+    x = x + fused
+    y = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+    return x, new_state
+
+
+def _logits_head(params, x: jnp.ndarray, cfg: ModelConfig):
+    """Shared logits tail: final norm + LM head at the single position."""
+    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    return L.linear(x[:, 0], params["lm_head"]).astype(jnp.float32)
+
+
 def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, **_):
     dtype = jnp.dtype(cfg.dtype)
     B, T = tokens.shape
@@ -131,11 +162,53 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, **_) -> Dict[str, Any
     }
 
 
-def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
-    dtype = jnp.dtype(cfg.dtype)
+def paged_decode_step(params, cache, table, tokens: jnp.ndarray,
+                      cfg: ModelConfig, *, write=None, seq_axes=None):
+    """Hymba decode straight through the page pool (DESIGN.md §6).
+
+    Only engaged when the attention window covers the whole cache (global
+    attention), i.e. the K/V leaves actually page: k/v arrive as
+    kernel-friendly ``(L, num_pages, page_size, Hkv, hd)`` pool leaves swept
+    by the layer scan, appended in place and attended gather-free; the SSM
+    state — the O(1) recurrent half of the hybrid head — stays dense and is
+    frozen (like ``len``) where ``write`` is False.
+    """
+    del seq_axes  # hymba pages k/v iff this entry point is reached at all
     B = tokens.shape[0]
     hd = cfg.resolved_head_dim
-    x = params["embed"][tokens][:, None, :].astype(dtype)
+    if write is None:
+        write = jnp.ones((B,), bool)
+    x = _embed_decode(params, tokens, cfg)
+    pos = cache["len"]
+    positions = pos[:, None]
+    window = cfg.layer_pattern[0].window
+
+    def layer(x, inputs):
+        p, kc, vc, sstate = inputs
+        xn = L.rmsnorm(x, p["ln_in"], cfg.norm_eps)
+        q, k, v = L.qkv_project(p["attn"], xn, cfg.num_heads,
+                                cfg.num_kv_heads, hd)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        kc = L.paged_cache_write(kc, k, table, pos, write)
+        vc = L.paged_cache_write(vc, v, table, pos, write)
+        o = ops.paged_decode_attention(q, kc, vc, table, pos + 1,
+                                       window=window,
+                                       use_pallas=cfg.use_pallas)
+        x, new_state = _fuse_tail(p, x, xn, o, sstate, cfg)
+        new_state = jnp.where(write[:, None, None], new_state, sstate)
+        return x, (kc, vc, new_state)
+
+    x, (k, v, ssm) = jax.lax.scan(
+        layer, x, (params["blocks"], cache["k"], cache["v"], cache["ssm"]))
+    logits = _logits_head(params, x, cfg)
+    return logits, {"k": k, "v": v, "ssm": ssm,
+                    "len": cache["len"] + write.astype(jnp.int32)}
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    x = _embed_decode(params, tokens, cfg)
     pos = cache["len"]
     positions = pos[:, None]
 
@@ -153,19 +226,10 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
                            cfg.parallel.aligned_decode)
         eff_len = jnp.minimum(pos + 1, S)
         o = ops.decode_attention(q, kc, vc, eff_len)
-        attn_out = L.linear(
-            o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd),
-            p["attn"]["wo"])
-        ssm_out, new_state = _ssm_branch(p, xn, cfg, state=sstate)
-        fused = 0.5 * (L.rmsnorm(attn_out, p["ln_attn_out"], cfg.norm_eps)
-                       + L.rmsnorm(ssm_out, p["ln_ssm_out"], cfg.norm_eps))
-        x = x + fused
-        y = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
-        x = x + L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+        x, new_state = _fuse_tail(p, x, xn, o, sstate, cfg)
         return x, (kc, vc, new_state)
 
     x, (k, v, ssm) = jax.lax.scan(
         layer, x, (params["blocks"], cache["k"], cache["v"], cache["ssm"]))
-    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
-    logits = L.linear(x[:, 0], params["lm_head"]).astype(jnp.float32)
+    logits = _logits_head(params, x, cfg)
     return logits, {"k": k, "v": v, "ssm": ssm, "len": cache["len"] + 1}

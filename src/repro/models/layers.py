@@ -131,3 +131,40 @@ def cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
     S = cache.shape[2]
     onehot = (jnp.arange(S)[None, :] == pos[:, None])[:, None, :, None]
     return jnp.where(onehot, new, cache)
+
+
+# Physical page 0 of every page pool is the reserved scratch page: writes
+# for inactive slots are routed there so the jitted step keeps fixed shapes
+# (serve/pages.py re-exports this as the allocator's contract).
+SCRATCH_PAGE = 0
+
+
+def page_offsets(table: jnp.ndarray, pos: jnp.ndarray, write: jnp.ndarray,
+                 page_size: int):
+    """Resolve per-slot write coordinates through the page table: position
+    ``pos[b]`` of slot ``b`` lives at ``(table[b, pos // ps], pos % ps)``;
+    slots with ``write=False`` are routed to the scratch page so jitted
+    programs keep fixed shapes whatever the active set.  The ONE place the
+    table-indexing/scratch contract lives — shared by the in-place append
+    (``paged_cache_write``) and the gather discipline's writeback
+    (``serve/pages.py::scatter_token``)."""
+    page = jnp.take_along_axis(table, (pos // page_size)[:, None],
+                               axis=1)[:, 0]
+    return jnp.where(write, page, SCRATCH_PAGE), pos % page_size
+
+
+def paged_cache_write(pool: jnp.ndarray, new: jnp.ndarray,
+                      table: jnp.ndarray, pos: jnp.ndarray,
+                      write: jnp.ndarray) -> jnp.ndarray:
+    """Append one token's K or V per slot directly into the page pool.
+
+    pool: (num_pages, page_size, Hkv, D) — one layer's kernel-friendly pool
+    slice; new: (B, Hkv, 1, D); table: (B, P) physical page ids; pos: (B,)
+    write positions (== ``len``); write: (B,) bool — inactive slots land on
+    the scratch page so the program shape never depends on the active set.
+    O(B x token bytes) pool traffic: the in-place counterpart of
+    ``cache_write`` with no dense view in sight.
+    """
+    page, off = page_offsets(table, pos, write, pool.shape[1])
+    tok = new[:, :, 0, :].astype(pool.dtype)           # (B, Hkv, D)
+    return pool.at[page, off].set(tok)

@@ -1,5 +1,5 @@
 """RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
-decay.  Split-brain mapping (DESIGN.md §6): all projections (r,k,v,g,o + the
+decay.  Split-brain mapping (DESIGN.md §7): all projections (r,k,v,g,o + the
 decay LoRA + channel-mix matrices) are static linear maps -> ITA device; the
 WKV recurrence carries dynamic state -> host.
 

@@ -179,11 +179,7 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
             x, a = group_fn(x, jax.tree.map(lambda t: t[g], xs))
             aux += a
 
-    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = L.linear(x, head).astype(jnp.float32)
-    if cfg.final_softcap:
-        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    logits = _logits_head(params, x, cfg)
     return logits, aux
 
 
@@ -212,6 +208,26 @@ def _block_tail(pj, x, o, cfg: ModelConfig):
     else:
         out = L.swiglu(y, pj["mlp"]["w1"], pj["mlp"]["w3"], pj["mlp"]["w2"])
     return x + out
+
+
+def _embed_decode(params, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Shared decode preamble: embed one token per row -> (B, 1, d)."""
+    x = params["embed"][tokens][:, None, :].astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _logits_head(params, x: jnp.ndarray, cfg: ModelConfig):
+    """Shared logits tail: final norm, (tied) LM head, final softcap.
+    ONE copy, so the dense and paged decode paths cannot drift apart on
+    the head math their token-identity contract depends on."""
+    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.linear(x, head).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
 
 
 
@@ -383,14 +399,99 @@ def prefill_chunk(params, cache, tokens: jnp.ndarray, true_len, cfg: ModelConfig
     return new_cache
 
 
+def paged_decode_step(params, cache, table, tokens: jnp.ndarray,
+                      cfg: ModelConfig, *, write=None, seq_axes=None):
+    """One decode step straight through the page pool — no dense view.
+
+    The gather-free serve path (DESIGN.md §6): full-attention pattern slots
+    hold their K/V as kernel-friendly pool leaves
+    ``(n_groups, gs//P, num_pages, page_size, Hkv, hd)``; the step appends
+    the new token to its page (``layers.paged_cache_write``) and attends via
+    ``ops.paged_decode_attention`` with pages as the split-K axis.  Ring
+    (window < max_len) slots and ``len`` keep the dense layout and the
+    exact ``decode_step`` math.
+
+    cache: paged slot-cache pytree; table: (B, P) physical page ids;
+    tokens: (B,); write: (B,) bool — slots with ``write=False`` are frozen
+    (their pool append routes to the scratch page, dense leaves and ``len``
+    keep their old values; their logits are garbage and must be ignored).
+    seq_axes: the per-leaf sequence-axis pytree from
+    ``serve/pages.py::seq_axes`` discovery — entries >= 0 mark pool leaves.
+    Token-identical to gathering the dense view and running ``decode_step``
+    (tests/test_paged_attention.py), with O(live tokens) KV reads.
+    """
+    n_groups, group_size = group_layout(cfg)
+    P = len(cfg.layer_pattern)
+    B = tokens.shape[0]
+    if write is None:
+        write = jnp.ones((B,), bool)
+    sa_k = [seq_axes["k"][j] for j in range(P)]
+    x = _embed_decode(params, tokens, cfg)
+    pos = cache["len"]                        # (B,)
+    positions = pos[:, None]                  # (B, 1)
+    wmask = write[:, None, None, None]
+
+    def group_fn(x, group_in):
+        gp = group_in["blocks"]
+        new_k, new_v = [], []
+        for j in range(group_size):
+            slot = j % P
+            spec = cfg.layer_pattern[slot]
+            pj = jax.tree.map(lambda a: a[j], gp)
+            kc = group_in["k"][slot][j // P]
+            vc = group_in["v"][slot][j // P]
+            q, k, v = _block_qkv(pj, x, positions, cfg)
+            if sa_k[slot] >= 0:
+                # pool leaf: in-place page append + gather-free attention.
+                # NOTE: no seq-sharded (decode_attn="shard_map") variant —
+                # the page pool is not sequence-sharded; configs needing it
+                # must serve via the dense or gather disciplines.
+                kc = L.paged_cache_write(kc, k, table, pos, write)
+                vc = L.paged_cache_write(vc, v, table, pos, write)
+                o = ops.paged_decode_attention(
+                    q, kc, vc, table, pos + 1, window=spec.window,
+                    softcap=cfg.softcap, use_pallas=cfg.use_pallas)
+            else:
+                # ring buffer (window < max_len): dense path, frozen where
+                # the slot is inactive
+                S = kc.shape[2]
+                idx = pos % S
+                kc_new = L.cache_write(kc, k[:, :, 0:1], idx,
+                                       cfg.parallel.aligned_decode)
+                vc_new = L.cache_write(vc, v[:, :, 0:1], idx,
+                                       cfg.parallel.aligned_decode)
+                kc = jnp.where(wmask, kc_new, kc)
+                vc = jnp.where(wmask, vc_new, vc)
+                eff_len = jnp.minimum(pos + 1, S)
+                # no dist_axis: the engine refuses inplace paging under
+                # decode_attn="shard_map" (serve/engine.py), so the seq-
+                # sharded decode variant is unreachable from this step
+                o = ops.decode_attention(q, kc_new, vc_new, eff_len,
+                                         softcap=cfg.softcap)
+            x = _block_tail(pj, x, o, cfg)
+            new_k.append(kc)
+            new_v.append(vc)
+        upd = {
+            "k": [jnp.stack(new_k[s::P]) for s in range(P)],
+            "v": [jnp.stack(new_v[s::P]) for s in range(P)],
+        }
+        return x, upd
+
+    xs = {"blocks": params["blocks"], "k": cache["k"], "v": cache["v"]}
+    x, upd = jax.lax.scan(group_fn, x, xs)
+
+    logits = _logits_head(params, x[:, 0], cfg)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
+    new_cache["len"] = cache["len"] + write.astype(jnp.int32)
+    return logits, new_cache
+
+
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
     """One decode step. tokens (B,) -> (logits (B, V), new_cache)."""
     n_groups, group_size = group_layout(cfg)
     P = len(cfg.layer_pattern)
-    dtype = jnp.dtype(cfg.dtype)
-    x = params["embed"][tokens][:, None, :].astype(dtype)
-    if cfg.tie_embeddings:
-        x = x * math.sqrt(cfg.d_model)
+    x = _embed_decode(params, tokens, cfg)
     pos = cache["len"]                        # (B,)
     positions = pos[:, None]                  # (B, 1)
 
@@ -446,11 +547,7 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
         xs["cross_v"] = cache["cross_v"]
     x, upd = jax.lax.scan(group_fn, x, xs)
 
-    x = L.rmsnorm(x, params["ln_final"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = L.linear(x[:, 0], head).astype(jnp.float32)
-    if cfg.final_softcap:
-        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    logits = _logits_head(params, x[:, 0], cfg)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = upd["k"], upd["v"]
     new_cache["len"] = cache["len"] + 1

@@ -25,16 +25,20 @@ Interface-traffic accounting (``meter``) replays eq. 7-10 bytes per *active*
 token (DESIGN.md §4).
 
 ``page_size=N`` switches the slot cache to the paged layout (serve/pages.py,
-DESIGN.md §5): sequence-growing cache leaves live in a shared page pool with
-a host-owned per-slot page table, allocated on demand and freed on EOS, so
-resident KV bytes track actual occupancy instead of max_slots × max_len.
-The paged decode step gathers the dense view through the (traced) table,
-runs the SAME family decode math, and scatters back only the one new token
-per active slot — fixed shapes throughout, zero steady-state recompiles.
-Leaves that do not scale with ``max_len`` (recurrent state, window ring
-buffers) pass through dense — the recurrent families' no-op page table.
-``prefill_chunk_slot`` feeds a prompt as fixed-width chunks so the scheduler
-can interleave prefill with decode (chunked prefill).
+DESIGN.md §5-6): sequence-growing cache leaves live in a shared page pool
+with a host-owned per-slot page table, allocated on demand and freed on EOS,
+so resident KV bytes track actual occupancy instead of max_slots × max_len.
+The default paged decode step (``paged_attn="inplace"``) appends each active
+slot's token to its page and computes attention DIRECTLY through the traced
+table (``api.paged_decode_step`` -> ``ops.paged_decode_attention``), so no
+dense-view transient exists and steady-state KV reads are O(live tokens)
+per slot; ``paged_attn="gather"`` keeps the PR-3 reference discipline
+(gather dense view -> same family decode math -> scatter one token) as the
+fallback/oracle.  Either way: fixed shapes throughout, zero steady-state
+recompiles.  Leaves that do not scale with ``max_len`` (recurrent state,
+window ring buffers) pass through dense — the recurrent families' no-op
+page table.  ``prefill_chunk_slot`` feeds a prompt as fixed-width chunks so
+the scheduler can interleave prefill with decode (chunked prefill).
 """
 from __future__ import annotations
 
@@ -58,7 +62,8 @@ from repro.train import step as step_mod
 class ServeEngine(pages_mod.PagedEngineMixin):
     def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128,
                  fused: bool = True, page_size: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 paged_attn: str = "inplace"):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh if mesh is not None else make_test_mesh()
@@ -83,6 +88,7 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         self.num_pages = num_pages
         self._pager = (pages_mod.HostPager(page_size, num_pages, max_len)
                        if page_size is not None else None)
+        self._paged_attn = self.check_paged_attn(paged_attn)
         self._paging_active = False            # set by init_slot_cache
         self._seq_ax = None
         self._paged_step = None
@@ -270,9 +276,12 @@ class ServeEngine(pages_mod.PagedEngineMixin):
 
     def _slot_seq_axes(self):
         """Per-leaf sequence axis (-1 = does not page), by shape diffing two
-        ``max_len`` builds — mirrors the batch-axis discovery above."""
+        ``max_len`` builds — mirrors the batch-axis discovery above.  Dense
+        engines discover with an arbitrary delta (the answer is delta-free
+        for any delta no window equals); the result also feeds the KV-read
+        byte accounting, which applies to every layout."""
         if self._seq_ax is None:
-            ps = self.page_size
+            ps = self.page_size or 8
             a = jax.eval_shape(lambda: api.init_cache(self.cfg, 2, self.max_len))
             b = jax.eval_shape(
                 lambda: api.init_cache(self.cfg, 2, self.max_len + ps))
@@ -289,19 +298,31 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         """
         assert not self.cfg.frontend_tokens and not self.cfg.cross_attn_every, \
             "continuous batching covers the text-only families"
-        no_paged_leaves = self.page_size is not None and all(
-            ax < 0 for ax in jax.tree.leaves(self._slot_seq_axes()))
-        if self.page_size is None or no_paged_leaves:
+        shape = jax.eval_shape(
+            lambda: api.init_cache(self.cfg, n_slots, self.max_len))
+        self._note_slot_cache(n_slots, shape, self._slot_axes(),
+                              self._slot_seq_axes())
+        if not self.will_page():
             # recurrent/ring-only families have nothing that scales with
             # max_len: the page table is a no-op and the dense layout IS
             # the occupancy-proportional one — skip pool bookkeeping.
             self._paging_active = False
             with self.mesh:
                 return api.init_cache(self.cfg, n_slots, self.max_len)
+        if (self._paged_attn == "inplace"
+                and self.cfg.parallel.decode_attn == "shard_map"):
+            # ops.paged_decode_attention has no seq-sharded (dist_axis)
+            # variant: refuse when paging actually engages rather than
+            # silently dropping the sharding the config asked for
+            # (DESIGN.md §6); never-paging families take the dense
+            # fallback above and keep working.
+            raise ValueError(
+                "paged_attn='inplace' does not support "
+                "parallel.decode_attn='shard_map' (the page pool is not "
+                "sequence-sharded); serve this config with "
+                "paged_attn='gather' or the dense slot cache")
         self._paging_active = True
         pool = self._pager.reset(n_slots)
-        shape = jax.eval_shape(
-            lambda: api.init_cache(self.cfg, n_slots, self.max_len))
         with self.mesh:
             return pages_mod.make_pool(shape, self._slot_axes(),
                                        self._slot_seq_axes(),
@@ -385,27 +406,40 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         steady-state loop re-dispatches one compiled program forever.
 
         Paged layout: the host allocates any page the step will write into
-        (position ``len``), then the jitted step gathers the dense view
-        through the traced page table, runs the SAME family decode math,
-        and scatters the one new token per active slot back to its page.
+        (position ``len``); then ``paged_attn="inplace"`` (default) appends
+        each active slot's token to its page and attends DIRECTLY through
+        the traced table (``api.paged_decode_step`` — no dense-view
+        transient), while ``paged_attn="gather"`` keeps the reference
+        discipline: gather the dense view, run the SAME family decode
+        math, scatter the one new token per active slot back to its page.
         """
         n = int(tokens.shape[0])
         if self._paging_active:
             act = np.asarray(active, bool)
             self._pager.pre_decode(act)
+            self._meter_kv_read(act)
             if self._paged_step is None:
                 ba, sa = self._slot_axes(), self._slot_seq_axes()
                 rcfg = self._ragged_cfg
 
-                def paged_step(params, pcache, table, toks, act_m):
-                    view = pages_mod.gather_tree(pcache, table, ba, sa)
-                    pos = view["len"]
-                    logits, new = api.decode_step(params, view, toks, rcfg)
-                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                    new = slots_mod.select_slots(act_m, new, view, ba)
-                    pc = pages_mod.scatter_token_tree(
-                        pcache, new, table, pos, act_m, ba, sa)
-                    return nxt, pc
+                if self._paged_attn == "inplace":
+                    def paged_step(params, pcache, table, toks, act_m):
+                        logits, pc = api.paged_decode_step(
+                            params, pcache, table, toks, rcfg, write=act_m,
+                            seq_axes=sa)
+                        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        return nxt, pc
+                else:
+                    def paged_step(params, pcache, table, toks, act_m):
+                        view = pages_mod.gather_tree(pcache, table, ba, sa)
+                        pos = view["len"]
+                        logits, new = api.decode_step(params, view, toks,
+                                                      rcfg)
+                        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        new = slots_mod.select_slots(act_m, new, view, ba)
+                        pc = pages_mod.scatter_token_tree(
+                            pcache, new, table, pos, act_m, ba, sa)
+                        return nxt, pc
 
                 self._paged_step = jax.jit(paged_step, donate_argnums=(1,))
             with self.mesh:
@@ -415,6 +449,7 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                                        jnp.asarray(active, bool))
             self._pager.post_decode(act)
             return out
+        self._meter_kv_read(np.asarray(active, bool))
         if n not in self._slot_step_jit:
             self._slot_step_jit[n] = step_mod.make_slot_step(
                 self._ragged_cfg, self.mesh, self.params, cache,

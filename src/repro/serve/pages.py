@@ -14,6 +14,16 @@ device sync on the allocation path).  Pages are allocated on demand as a
 sequence grows and returned to the free list when its request finishes, so
 resident KV bytes track actual token occupancy.
 
+The pool layout is KERNEL-FRIENDLY: the ``(num_pages, page_size)`` axes sit
+exactly where the batch axis sat in the dense leaf (``page_axis``), so
+leading non-sequence axes — the stacked layer axis of
+``(L, B, Hkv, S, hd)`` caches, the ``(n_groups, gs)`` group axes of the lm
+family — stay leading.  A ``lax.scan`` over depth therefore sweeps
+per-layer pool slices ``(num_pages, page_size, Hkv, hd)`` directly, which
+is the exact operand layout ``kernels/paged_attention.py`` (and its jnp
+oracle) consumes: attention walks ``pool[table]`` page-block-wise with no
+dense-view transient (DESIGN.md §6).
+
 Physical page 0 is reserved as a *scratch* page: table entries beyond a
 slot's allocated pages point at it, so every jitted program can write a
 fixed number of pages (traced indices, fixed shapes — zero steady-state
@@ -35,16 +45,17 @@ attention math bit-for-bit), and ``scatter_token_tree`` writes back only
 the one new token per active slot — O(B × token bytes) pool traffic per
 step.
 
-Scope of the memory claim: what paging shrinks is the PERSISTENT cache
-state — the pool allocation and the peak pages-in-use that admission and
-the serve_bench gate reason about.  The reference decode step still
-materializes the gathered dense view as a per-dispatch TRANSIENT, so the
-instantaneous high-water mark during a step is view + pool; eliminating
-that transient needs a page-table-aware attention kernel that walks
-``pool[table]`` block-wise (the TPU/Pallas follow-up), not cache-layout
-plumbing.  In-flight chunked prefills each hold a dense B=1 request cache
-until insertion, bounded by the scheduler's ``max_prefill_jobs`` cap.
-DESIGN.md §5 spells out all three pieces.
+Scope of the memory claim: paging shrinks the PERSISTENT cache state — the
+pool allocation and the peak pages-in-use that admission and the
+serve_bench gate reason about.  The default decode discipline
+(``paged_attn="inplace"``) additionally computes attention directly
+through the page table (``ops.paged_decode_attention``), so the per-step
+gathered dense-view TRANSIENT of the fallback/oracle discipline
+(``paged_attn="gather"``, which reconstructs the dense view and reuses the
+verified family ``decode_step``) is gone too — zero transient bytes, HBM
+reads O(live tokens) per slot.  In-flight chunked prefills each hold a
+dense B=1 request cache until insertion, bounded by the scheduler's
+``max_prefill_jobs`` cap.  DESIGN.md §5–6 spell out all three pieces.
 """
 from __future__ import annotations
 
@@ -55,6 +66,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.layers import SCRATCH_PAGE, page_offsets
+
 __all__ = [
     "PagePool",
     "HostPager",
@@ -62,6 +75,7 @@ __all__ = [
     "check_chunk_width",
     "round_len",
     "seq_axes",
+    "page_axis",
     "make_pool",
     "gather_view",
     "gather_tree",
@@ -69,9 +83,9 @@ __all__ = [
     "insert_tree",
     "pool_bytes",
     "page_token_bytes",
+    "kv_token_bytes",
+    "SCRATCH_PAGE",
 ]
-
-SCRATCH_PAGE = 0
 
 
 def check_chunk_width(width: int, max_len: int) -> None:
@@ -255,7 +269,8 @@ class HostPager:
     def stats(self, cache: Any, sa: Any) -> Dict[str, int]:
         """Resident-cache accounting for the paged-vs-dense benchmark."""
         total = sum(int(a.nbytes) for a in jax.tree.leaves(cache))
-        page_bytes = page_token_bytes(cache, sa) * self.page_size
+        page_bytes = page_token_bytes(cache, sa, self.pool.num_pages,
+                                      self.page_size) * self.page_size
         dense_leaves = total - pool_bytes(cache, sa)
         return {
             "cache_bytes": total,
@@ -277,14 +292,88 @@ class PagedEngineMixin:
     ``_paging_active`` (set by its ``init_slot_cache`` — False when the
     family has no paging leaves and fell back to the dense layout), plus a
     ``_stats_seq_axes()`` hook returning its per-leaf sequence-axis tree.
+
+    ``paged_attn`` selects the paged decode discipline: ``"inplace"`` (the
+    default) computes attention directly through the page table
+    (``ops.paged_decode_attention`` — no dense-view transient, O(live
+    tokens) KV reads per slot); ``"gather"`` keeps the PR-3 reference path
+    (gather dense view -> family ``decode_step`` -> scatter one token) as
+    the fallback/oracle the parity suite checks the kernel against.
     """
 
     _pager: Optional[HostPager] = None
     _paging_active: bool = False
     _paged_insert_jit = None
+    _paged_attn: str = "inplace"
+    _kv_tok_bytes: int = 0       # per-token-per-slot seq-scaling cache bytes
+    _slot_count: int = 0
 
     def _stats_seq_axes(self):
         raise NotImplementedError
+
+    def will_page(self) -> bool:
+        """Whether ``init_slot_cache`` will engage the page pool — THE
+        paging-leaf discovery rule (a ``page_size`` plus at least one
+        sequence-scaling leaf), shared by the engines' fallback decision,
+        the in-place/shard_map refusal, and serve_bench's discipline
+        selection."""
+        if getattr(self, "page_size", None) is None:
+            return False
+        return any(ax >= 0 for ax in jax.tree.leaves(self._stats_seq_axes()))
+
+    @staticmethod
+    def check_paged_attn(paged_attn: str) -> str:
+        if paged_attn not in ("inplace", "gather"):
+            raise ValueError(
+                f"paged_attn must be 'inplace' or 'gather', got {paged_attn!r}")
+        return paged_attn
+
+    def _note_slot_cache(self, n_slots: int, cache_shape: Any, ba: Any,
+                         sa: Any) -> None:
+        """Record the slot-cache geometry the KV-read accounting needs
+        (called by both engines' ``init_slot_cache``, every layout)."""
+        self._slot_count = int(n_slots)
+        self._kv_tok_bytes = kv_token_bytes(cache_shape, ba, sa)
+
+    # ------------------------------------------------ host KV-read accounting
+    def _dense_view_read_bytes(self) -> int:
+        """Bytes one masked decode step reads through a dense (or gathered)
+        ``(max_slots, ..., max_len, ...)`` KV view: every slot's full
+        allocation, live or not."""
+        return self._slot_count * self.max_len * self._kv_tok_bytes
+
+    def kv_read_bytes_step(self, active: np.ndarray) -> int:
+        """KV-cache bytes ONE decode step reads under the engine's current
+        discipline's read MODEL (replayed host-side like every meter entry,
+        not a hardware counter).  The in-place paged discipline touches only
+        the LIVE pages — ``ceil((len + is_active)/page_size)`` per occupied
+        slot, since the kernel's grid walks EVERY slot's table but fetches
+        real pages only up to its length (free slots hold length 0 and
+        all-scratch tables; the dead tail lands on the one hot scratch
+        page).  Eq. 7-10's intent: traffic proportional to live tokens.
+        The gather and dense disciplines materialize/read the full
+        ``max_slots x max_len`` view regardless of occupancy."""
+        if self._paging_active and self._paged_attn == "inplace":
+            ps = self._pager.page_size
+            lens = self._pager.host_len + np.asarray(active, bool)
+            pages_touched = int(-((lens[lens > 0]) // -ps).sum())
+            return pages_touched * ps * self._kv_tok_bytes
+        return self._dense_view_read_bytes()
+
+    def _meter_kv_read(self, active: np.ndarray) -> None:
+        n = self.kv_read_bytes_step(active)
+        if n:
+            self.meter.host_read("kv_cache_read", n)
+
+    def gather_transient_bytes_per_step(self) -> int:
+        """Dense-view TRANSIENT bytes one paged decode step materializes:
+        the gather discipline copies every live slot's full dense view per
+        dispatch; the in-place discipline (and the dense layout, whose
+        cache IS the view) materializes none.  The serve_bench regression
+        gate for the eliminated copy."""
+        if self._paging_active and self._paged_attn == "gather":
+            return self._dense_view_read_bytes()
+        return 0
 
     def paged_insert(self, batched_cache, single_cache, slot: int,
                      ba: Any, sa: Any, n_tokens: int):
@@ -330,10 +419,10 @@ class PagedEngineMixin:
         ``peak_kv_bytes_in_use`` is what the pages actually held at peak
         (== cache_bytes for the dense layout, where every slot pins
         ``max_len`` positions whether it uses them or not).  NOTE these
-        measure the PERSISTENT cache state; the reference paged decode
-        step additionally materializes a transient dense view per dispatch
-        (module docstring) that a page-table-aware attention kernel would
-        eliminate.
+        measure the PERSISTENT cache state; the per-dispatch dense-view
+        transient on top of it is ``gather_transient_bytes_per_step()`` —
+        nonzero only under the ``paged_attn="gather"`` fallback, zero for
+        the default in-place discipline (module docstring, DESIGN.md §6).
         """
         if not self._paging_active:
             total = sum(int(a.nbytes) for a in jax.tree.leaves(cache))
@@ -363,6 +452,29 @@ def seq_axes(cache_a: Any, cache_b: Any, delta: int) -> Any:
     return jax.tree.map(axis, cache_a, cache_b)
 
 
+def page_axis(b_ax: int, s_ax: int) -> int:
+    """Leading axis of the ``(num_pages, page_size)`` pair in a pool leaf.
+
+    The kernel-friendly layout keeps every non-(B, S) axis in its dense
+    order and drops the page axes exactly where the batch axis sat, so
+    layer-leading caches stay ``lax.scan``-sweepable and per-layer pool
+    slices land in the ``(num_pages, page_size, *tail)`` operand layout
+    ``kernels/paged_attention.py`` expects.
+    """
+    return b_ax - (1 if 0 <= s_ax < b_ax else 0)
+
+
+def _pages_leading(pool: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
+    """View a pool leaf with the (num_pages, page_size) axes leading."""
+    pax = page_axis(b_ax, s_ax)
+    return jnp.moveaxis(pool, (pax, pax + 1), (0, 1))
+
+
+def _pages_restore(pool: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
+    pax = page_axis(b_ax, s_ax)
+    return jnp.moveaxis(pool, (0, 1), (pax, pax + 1))
+
+
 def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
               page_size: int) -> Any:
     """Allocate the paged slot cache: pool layout for paging leaves, dense
@@ -372,7 +484,9 @@ def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
         if s_ax < 0:
             return jnp.zeros(a.shape, a.dtype)
         rest = tuple(d for i, d in enumerate(a.shape) if i not in (b_ax, s_ax))
-        return jnp.zeros((num_pages, page_size) + rest, a.dtype)
+        pax = page_axis(b_ax, s_ax)
+        return jnp.zeros(rest[:pax] + (num_pages, page_size) + rest[pax:],
+                         a.dtype)
 
     return jax.tree.map(leaf, cache_shape, ba, sa)
 
@@ -384,14 +498,25 @@ def pool_bytes(pcache: Any, sa: Any) -> int:
     return sum(jax.tree.leaves(sizes))
 
 
-def page_token_bytes(pcache: Any, sa: Any) -> int:
-    """KV bytes per token summed over the paged leaves (page bytes / ps)."""
-    def per_tok(a, s_ax):
+def page_token_bytes(pcache: Any, sa: Any, num_pages: int,
+                     page_size: int) -> int:
+    """KV bytes per token summed over the paged leaves (pool bytes spread
+    over the pool's ``num_pages * page_size`` token positions)."""
+    return pool_bytes(pcache, sa) // (int(num_pages) * int(page_size))
+
+
+def kv_token_bytes(cache_shape: Any, ba: Any, sa: Any) -> int:
+    """Per-token-per-slot bytes of the sequence-scaling cache leaves, from
+    the DENSE cache shapes (paged or not: the same KV bytes per token).
+    The denominator of the live-page read accounting (TrafficMeter
+    ``host_read``) and of the gather-transient metric in serve_bench."""
+    def per_tok(a, b_ax, s_ax):
         if s_ax < 0:
             return 0
-        return int(math.prod(a.shape[2:])) * a.dtype.itemsize
+        n = int(math.prod(a.shape)) // (a.shape[b_ax] * a.shape[s_ax])
+        return n * jnp.dtype(a.dtype).itemsize
 
-    sizes = jax.tree.map(per_tok, pcache, sa)
+    sizes = jax.tree.map(per_tok, cache_shape, ba, sa)
     return sum(jax.tree.leaves(sizes))
 
 
@@ -401,11 +526,14 @@ def page_token_bytes(pcache: Any, sa: Any) -> int:
 def gather_view(pool: jnp.ndarray, table: jnp.ndarray, b_ax: int,
                 s_ax: int) -> jnp.ndarray:
     """Reassemble one paged leaf into its dense ``(..., B, ..., S, ...)``
-    view through the page table ``(B, P)``."""
+    view through the page table ``(B, P)``.  This materializes the
+    O(B x max_len) transient the in-place paged attention path exists to
+    avoid — fallback/oracle only (DESIGN.md §6)."""
     B, P = table.shape
-    ps = pool.shape[1]
-    g = pool[table]                                    # (B, P, ps, *rest)
-    g = g.reshape((B, P * ps) + pool.shape[2:])        # (B, S, *rest)
+    p = _pages_leading(pool, b_ax, s_ax)               # (N, ps, *rest)
+    ps = p.shape[1]
+    g = p[table]                                       # (B, P, ps, *rest)
+    g = g.reshape((B, P * ps) + p.shape[2:])           # (B, S, *rest)
     return jnp.moveaxis(g, (0, 1), (b_ax, s_ax))
 
 
@@ -435,11 +563,11 @@ def scatter_token(pool: jnp.ndarray, table: jnp.ndarray,
                   write: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
     """Write each active slot's token at ``pos[b]`` from the updated dense
     view back into its page; inactive slots land on the scratch page."""
-    ps = pool.shape[1]
+    p = _pages_leading(pool, b_ax, s_ax)
     tok = _take_token(new_leaf, pos, b_ax, s_ax)       # (B, *rest)
-    page = jnp.take_along_axis(table, (pos // ps)[:, None], axis=1)[:, 0]
-    page = jnp.where(write, page, SCRATCH_PAGE)
-    return pool.at[page, pos % ps].set(tok.astype(pool.dtype))
+    page, off = page_offsets(table, pos, write, p.shape[1])
+    p = p.at[page, off].set(tok.astype(pool.dtype))
+    return _pages_restore(p, b_ax, s_ax)
 
 
 def scatter_token_tree(pcache: Any, new_view: Any, table: jnp.ndarray,
@@ -472,7 +600,9 @@ def insert_tree(pcache: Any, single: Any, table_row: jnp.ndarray,
         if s_ax < 0:
             return jax.lax.dynamic_update_slice_in_dim(
                 p, s.astype(p.dtype), slot, axis=b_ax)
-        blocks = _dense_to_pages(s, b_ax, s_ax, p.shape[1])
-        return p.at[table_row].set(blocks.astype(p.dtype))
+        pl = _pages_leading(p, b_ax, s_ax)
+        blocks = _dense_to_pages(s, b_ax, s_ax, pl.shape[1])
+        pl = pl.at[table_row].set(blocks.astype(p.dtype))
+        return _pages_restore(pl, b_ax, s_ax)
 
     return jax.tree.map(leaf, pcache, single, ba, sa)

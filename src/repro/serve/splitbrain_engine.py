@@ -62,7 +62,8 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
                  quantize: bool = True, jit: bool = True,
                  use_pallas: bool = False, page_size: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 paged_attn: str = "inplace"):
         assert cfg.family == "lm" and len(cfg.layer_pattern) == 1, \
             "split-brain reference engine covers the paper's LM configs"
         assert not cfg.moe, "split-brain reference engine covers dense FFNs"
@@ -108,6 +109,7 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         self.num_pages = num_pages
         self._pager = (pages_mod.HostPager(page_size, num_pages, max_len)
                        if page_size is not None else None)
+        self._paged_attn = self.check_paged_attn(paged_attn)
         self._paging_active = self._pager is not None   # k/v always page
         self._paged_step = None
 
@@ -157,19 +159,20 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         self.meter.d2h("logits", (batch, 1, cfg.vocab_size))
 
     # --------------------------------------------------------- fused hot path
-    def _token_step(self, weights, k_cache, v_cache, length, token):
-        """One split-brain token, traceable: lax.scan over the stacked layers.
-
-        k_cache/v_cache: (L, B, Hkv, S, hd).  Returns
-        (next_tok, logits, new_k, new_v, new_length).
-        """
+    def _layer_sweep(self, weights, k_cache, v_cache, pos, token, kv_attend):
+        """The shared split-brain per-token body: embed, lax.scan the
+        stacked layers (pre-norm -> DEVICE QKV -> rope -> the injected
+        ``kv_attend`` -> DEVICE wo -> HOST residual -> DEVICE FFN), final
+        norm, DEVICE head, HOST argmax.  ``kv_attend(kc, vc, q, k, v)`` is
+        the ONLY point the dense and paged disciplines differ (cache
+        append + attention), so their token-identity contract cannot drift
+        anywhere else.  Returns (next_tok, logits, new_k, new_v)."""
         cfg = self.cfg
         B = token.shape[0]
         hd = self._hd
         pl = self.use_pallas
         # HOST: embedding lookup (vocabulary table, random access)
         x = weights["embed"][token][:, None, :].astype(self._dtype)
-        pos = length
         positions = pos[:, None]
 
         def layer_fn(x, per_layer):
@@ -181,13 +184,8 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                                     cfg.num_kv_heads, hd, use_pallas=pl)
             q = L.rope(q, positions, cfg.rope_theta)
             k = L.rope(k, positions, cfg.rope_theta)
-            # HOST: KV-cache append + attention
-            kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
-                c, kk, (0, i, 0)))(kc, k[:, :, 0:1], pos)
-            vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
-                c, vv, (0, i, 0)))(vc, v[:, :, 0:1], pos)
-            attn = ops.decode_attention(q, kc, vc, pos + 1,
-                                        softcap=cfg.softcap)
+            # HOST: KV-cache append + attention (discipline-specific)
+            attn, kc, vc = kv_attend(kc, vc, q, k, v)
             attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
             # DEVICE: output projection;  HOST: residual add
             x = x + L.linear(attn, p["attn"]["wo"], pl)
@@ -203,7 +201,55 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         logits = L.linear(x, weights["head"], pl)[:, 0]
         # HOST: sampling
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_k, new_v
+
+    def _token_step(self, weights, k_cache, v_cache, length, token):
+        """One split-brain token, traceable: lax.scan over the stacked layers.
+
+        k_cache/v_cache: (L, B, Hkv, S, hd).  Returns
+        (next_tok, logits, new_k, new_v, new_length).
+        """
+        pos = length
+
+        def kv_attend(kc, vc, q, k, v):
+            kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+                c, kk, (0, i, 0)))(kc, k[:, :, 0:1], pos)
+            vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+                c, vv, (0, i, 0)))(vc, v[:, :, 0:1], pos)
+            attn = ops.decode_attention(q, kc, vc, pos + 1,
+                                        softcap=self.cfg.softcap)
+            return attn, kc, vc
+
+        next_tok, logits, new_k, new_v = self._layer_sweep(
+            weights, k_cache, v_cache, pos, token, kv_attend)
         return next_tok, logits, new_k, new_v, length + 1
+
+    def _paged_token_step(self, weights, k_pool, v_pool, table, length,
+                          token, write):
+        """One split-brain token computed THROUGH the page pool — no dense
+        view.  k_pool/v_pool: (L, num_pages, page_size, Hkv, hd) in the
+        kernel-friendly layout, swept per layer by the same
+        ``_layer_sweep`` as ``_token_step``; the HOST phase appends each
+        active slot's K/V to its page (inactive slots land on scratch) and
+        attention walks ``pool[table]`` page-block-wise
+        (``ops.paged_decode_attention``), so steady-state KV reads are
+        O(live tokens) per slot.  Returns
+        (next_tok, logits, new_k_pool, new_v_pool, new_length).
+        """
+        pos = length
+
+        def kv_attend(kc, vc, q, k, v):
+            kc = L.paged_cache_write(kc, k, table, pos, write)
+            vc = L.paged_cache_write(vc, v, table, pos, write)
+            attn = ops.paged_decode_attention(q, kc, vc, table, pos + 1,
+                                              softcap=self.cfg.softcap,
+                                              use_pallas=self.use_pallas)
+            return attn, kc, vc
+
+        next_tok, logits, new_k, new_v = self._layer_sweep(
+            weights, k_pool, v_pool, pos, token, kv_attend)
+        return (next_tok, logits, new_k, new_v,
+                length + write.astype(jnp.int32))
 
     def _generate_fn(self, steps: int, max_out: int, eos_id: Optional[int]):
         """Build the fused multi-token loop: prompt forcing + greedy decode
@@ -432,10 +478,12 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
     _SEQ_AXES = {"k": 3, "v": 3, "len": -1}
 
     def init_slot_cache(self, n_slots: int) -> Dict[str, Any]:
+        shape = jax.eval_shape(lambda: self.init_cache(n_slots))
+        self._note_slot_cache(n_slots, shape, self._SLOT_AXES,
+                              self._SEQ_AXES)
         if not self._paging_active:
             return self.init_cache(n_slots)
         pool = self._pager.reset(n_slots)
-        shape = jax.eval_shape(lambda: self.init_cache(n_slots))
         return pages_mod.make_pool(shape, self._SLOT_AXES, self._SEQ_AXES,
                                    pool.num_pages, self.page_size)
 
@@ -525,25 +573,36 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         """One masked batched split-brain token step: every slot computes,
         only ``active`` slots advance (K/V and ``len`` frozen elsewhere).
         Fixed (max_slots, ...) shapes — zero recompiles in steady state.
-        Paged layout: host allocates the page position ``len`` falls in,
-        the jitted step gathers K/V through the traced page table, runs the
-        same token step, and scatters back one token per active slot."""
+        Paged layout: host allocates the page position ``len`` falls in;
+        ``paged_attn="inplace"`` (default) appends K/V to the pages and
+        attends directly through the traced table (``_paged_token_step`` —
+        no dense-view transient), ``paged_attn="gather"`` keeps the
+        reference discipline (gather K/V through the table, same token
+        step, scatter one token back per active slot)."""
         if self._paging_active:
             act = np.asarray(active, bool)
             self._pager.pre_decode(act)
+            self._meter_kv_read(act)
             if self._paged_step is None:
                 ba, sa = self._SLOT_AXES, self._SEQ_AXES
 
-                def paged_step(weights, pcache, table, tok, act_m):
-                    view = pages_mod.gather_tree(pcache, table, ba, sa)
-                    pos = view["len"]
-                    nxt, _, k2, v2, ln2 = self._token_step(
-                        weights, view["k"], view["v"], pos, tok)
-                    new = {"k": k2, "v": v2,
-                           "len": jnp.where(act_m, ln2, pos)}
-                    pc = pages_mod.scatter_token_tree(
-                        pcache, new, table, pos, act_m, ba, sa)
-                    return nxt, pc
+                if self._paged_attn == "inplace":
+                    def paged_step(weights, pcache, table, tok, act_m):
+                        nxt, _, k2, v2, ln2 = self._paged_token_step(
+                            weights, pcache["k"], pcache["v"], table,
+                            pcache["len"], tok, act_m)
+                        return nxt, {"k": k2, "v": v2, "len": ln2}
+                else:
+                    def paged_step(weights, pcache, table, tok, act_m):
+                        view = pages_mod.gather_tree(pcache, table, ba, sa)
+                        pos = view["len"]
+                        nxt, _, k2, v2, ln2 = self._token_step(
+                            weights, view["k"], view["v"], pos, tok)
+                        new = {"k": k2, "v": v2,
+                               "len": jnp.where(act_m, ln2, pos)}
+                        pc = pages_mod.scatter_token_tree(
+                            pcache, new, table, pos, act_m, ba, sa)
+                        return nxt, pc
 
                 self._paged_step = jax.jit(paged_step, donate_argnums=(1,))
             nxt, pc = self._paged_step(
@@ -551,6 +610,7 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                 jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
             self._pager.post_decode(act)
             return nxt, pc
+        self._meter_kv_read(np.asarray(active, bool))
         if self._slot_step is None:
             def slot_step(weights, k, v, ln, tok, active):
                 nxt, _, k2, v2, ln2 = self._token_step(weights, k, v, ln, tok)

@@ -72,10 +72,12 @@ def test_seq_axes_discovery_lm_vs_recurrent():
 # ------------------------------------------------- gather / scatter ops
 def _toy_pool(B=3, S=8, ps=4, extra=2, num_pages=2 * 3 * 2 + 1):
     """One leaf shaped like a small stacked KV cache: (L, B, Hkv, S, hd)
-    pattern collapsed to (extra, B, S) with ba=1, sa=2."""
+    pattern collapsed to (extra, B, S) with ba=1, sa=2.  The pool uses the
+    kernel-friendly layout — page axes sit where the batch axis sat, so the
+    leading (layer-like) axis stays leading: (extra, num_pages, ps)."""
     rng = np.random.default_rng(0)
     dense = rng.standard_normal((extra, B, S)).astype(np.float32)
-    pool = np.zeros((num_pages, ps, extra), np.float32)
+    pool = np.zeros((extra, num_pages, ps), np.float32)
     return dense, pool
 
 
@@ -84,7 +86,7 @@ def test_insert_gather_roundtrip_and_scratch_isolation():
     dense, pool = _toy_pool()
     extra, B, S = dense.shape
     P = S // ps
-    host = pages.PagePool(pool.shape[0], ps, n_slots=B, slot_pages=P)
+    host = pages.PagePool(pool.shape[1], ps, n_slots=B, slot_pages=P)
     pool = jnp.asarray(pool)
     # insert each row as a B=1 single cache with a full page table
     for b in range(B):
@@ -117,7 +119,7 @@ def test_insert_excess_logical_pages_hit_scratch_only():
     dense, pool = _toy_pool()
     extra, B, S = dense.shape
     P = S // ps
-    host = pages.PagePool(pool.shape[0], ps, n_slots=B, slot_pages=P)
+    host = pages.PagePool(pool.shape[1], ps, n_slots=B, slot_pages=P)
     pool = jnp.asarray(pool)
     # slot 0 owns all its pages and holds known data
     assert host.try_reserve(0, S)
@@ -143,7 +145,27 @@ def test_insert_excess_logical_pages_hit_scratch_only():
 
 def test_pool_byte_accounting():
     dense, pool = _toy_pool()
+    extra, num_pages, ps = pool.shape
     pool = jnp.asarray(pool)
     assert pages.pool_bytes(pool, 2) == pool.nbytes
     assert pages.pool_bytes(pool, -1) == 0
-    assert pages.page_token_bytes(pool, 2) == pool.shape[2] * 4
+    # (extra, N, ps) pool: each token position carries `extra` floats
+    assert pages.page_token_bytes(pool, 2, num_pages, ps) == extra * 4
+    # dense-shape accounting agrees: same KV bytes per token per slot
+    dense_shape = jax.eval_shape(lambda: jnp.asarray(dense))
+    assert pages.kv_token_bytes(dense_shape, 1, 2) == extra * 4
+    assert pages.kv_token_bytes(dense_shape, 1, -1) == 0
+
+
+def test_make_pool_kernel_friendly_layout():
+    """Page axes land where the batch axis sat; leading layer/group axes
+    stay leading so depth scans sweep per-layer (N, ps, *tail) slices."""
+    shape = {"k": jax.ShapeDtypeStruct((5, 3, 2, 8, 4), jnp.float32),
+             "len": jax.ShapeDtypeStruct((3,), jnp.int32)}
+    ba = {"k": 1, "len": 0}
+    sa = {"k": 3, "len": -1}
+    pool = pages.make_pool(shape, ba, sa, num_pages=7, page_size=4)
+    assert pool["k"].shape == (5, 7, 4, 2, 4)     # (L, N, ps, Hkv, hd)
+    assert pool["len"].shape == (3,)
+    assert pages.page_axis(1, 3) == 1
+    assert pages.page_axis(2, 0) == 1             # seq axis before batch
