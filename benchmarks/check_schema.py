@@ -1,0 +1,69 @@
+"""Validate BENCH_serve.json artifacts against the current bench schema.
+
+CI runs this over both the freshly generated --quick artifact and the
+checked-in full-run artifact, so a schema bump that forgets to regenerate
+(or a bench edit that silently drops a gated field) fails the build:
+
+  PYTHONPATH=src python benchmarks/check_schema.py BENCH_serve_ci.json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = "serve_bench/v4"
+
+# every per-arch result of the four slot-cache disciplines
+RESULT_KEYS = {
+    "config", "sequential", "continuous", "paged", "paged_gather",
+    "requests_per_s_speedup", "paged_memory_saving",
+    "steady_state_recompiles", "paged_steady_state_recompiles",
+    "traffic_exact",
+}
+# the shared-prefix discipline (off/on pair)
+PREFIX_KEYS = {
+    "config", "off", "on", "token_identical", "prefix_overlap",
+    "cached_prompt_tokens", "prefill_tokens_per_s_uplift",
+    "kv_pages_stored_reduction", "zero_steady_state_recompiles",
+    "traffic_exact",
+}
+# per-run latency percentiles (serve_bench/v4)
+RUN_KEYS = {"latency_s", "ttft_s", "queue_wait_s", "cached_prompt_tokens"}
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        report = json.load(f)
+    assert report.get("schema") == SCHEMA, (
+        f"{path}: schema {report.get('schema')!r} != {SCHEMA!r} — "
+        f"regenerate the artifact with benchmarks/serve_bench.py")
+    assert report["results"], f"{path}: no results"
+    for r in report["results"]:
+        missing = RESULT_KEYS - r.keys()
+        assert not missing, f"{path}: result {r['config']} missing {missing}"
+        for run in ("continuous", "paged"):
+            miss = RUN_KEYS - r[run].keys()
+            assert not miss, f"{path}: {r['config']}.{run} missing {miss}"
+            for k in ("latency_s", "ttft_s", "queue_wait_s"):
+                assert {"p50", "p95"} <= r[run][k].keys(), (path, run, k)
+    assert report.get("prefix_results"), f"{path}: no prefix_results"
+    for r in report["prefix_results"]:
+        missing = PREFIX_KEYS - r.keys()
+        assert not missing, f"{path}: prefix {r['config']} missing {missing}"
+        assert r["prefix_overlap"] >= 0.5, (
+            f"{path}: prefix discipline must run at >= 50% overlap")
+    print(f"{path}: ok ({SCHEMA})")
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_schema.py BENCH_serve.json [...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        check(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

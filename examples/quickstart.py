@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import costmodel, quant
+from repro.core import costmodel
 from repro.models import api
 from repro.serve.splitbrain_engine import SplitBrainEngine, traffic_model_for
 

@@ -23,12 +23,10 @@ import os
 import re
 import shutil
 import signal
-import tempfile
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"

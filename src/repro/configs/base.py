@@ -6,7 +6,6 @@ assignment; ``reduced()`` derives the CPU smoke-test version.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 

@@ -2,9 +2,8 @@
 
 Exact figures from the assignment; see ``source=`` for provenance.
 """
-from repro.configs.base import (ITAConfig, LayerSpec, ModelConfig, MoEConfig,
-                                ParallelConfig, SSMConfig)
-from repro.configs.common import PAR_BIG, PAR_SMALL
+from repro.configs.base import ITAConfig, ModelConfig
+from repro.configs.common import PAR_BIG
 
 CONFIG = ModelConfig(
     name="llama2-7b", family="lm",

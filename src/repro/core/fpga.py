@@ -14,7 +14,6 @@ measured per-MAC figures pin the constants.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, Optional
 
 import numpy as np

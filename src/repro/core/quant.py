@@ -22,11 +22,9 @@ All functions are functional and jittable; weights-side tables come from
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import csd
 

@@ -15,8 +15,8 @@ and sampling.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 __all__ = ["Interface", "INTERFACES", "TrafficModel", "TrafficMeter"]
 
@@ -171,6 +171,13 @@ class TrafficMeter:
         n = int(nbytes)
         self.host_read_bytes += n
         self.host_log.append((name, n))
+
+    def host_channel_bytes(self, name: str) -> int:
+        """Total host-local bytes logged under ONE channel name.  The host
+        channels are heterogeneous (KV reads, prefix-cache savings, CoW
+        copies), so consumers comparing a specific quantity must filter by
+        channel instead of using the ``host_read_bytes`` aggregate."""
+        return sum(n for ch, n in self.host_log if ch == name)
 
     @property
     def total(self) -> int:

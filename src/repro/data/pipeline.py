@@ -15,10 +15,8 @@ example runs, rather than staying at uniform entropy).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -19,7 +19,6 @@ decode cells.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -16,13 +16,13 @@ divisible by the mesh axis size (e.g. 4 KV heads never shard over 16-way
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 # param-name -> logical spec on the trailing dims (stacked leading dims get None)
 _COL = ("fsdp", "model")     # (d_in, out): out split over TP

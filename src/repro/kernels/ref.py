@@ -8,7 +8,6 @@ dry-run cells.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -26,7 +26,6 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, registry
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.distributed import sharding as shd
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models import api

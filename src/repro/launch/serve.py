@@ -11,6 +11,11 @@
   # prompts stream in fixed-width chunks between decode steps
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --page-size 8 --prefill-chunk 8
+
+  # shared-prefix KV reuse: prompts sharing page-aligned prefixes with
+  # earlier requests skip re-prefilling them (ref-counted CoW pages)
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --page-size 8 --prefill-chunk 8 --prefix-cache on
 """
 from __future__ import annotations
 
@@ -57,9 +62,19 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill width (interleaves prompt chunks "
                          "with decode steps; must divide max_len)")
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
+                    help="shared-prefix KV reuse: admission radix-matches "
+                         "each prompt against previously served page-"
+                         "aligned prefixes and maps the shared pages "
+                         "(refcounted, copy-on-write) instead of "
+                         "re-prefilling them; requires --page-size, "
+                         "no-ops for families with recurrent/ring state")
     args = ap.parse_args(argv)
     if args.num_pages is not None and args.page_size is None:
         ap.error("--num-pages requires --page-size (the paged KV cache)")
+    if args.prefix_cache == "on" and args.page_size is None:
+        ap.error("--prefix-cache on requires --page-size (the prefix index "
+                 "shares pool pages)")
     if not args.continuous and (args.page_size is not None
                                 or args.num_pages is not None
                                 or args.prefill_chunk is not None):
@@ -80,7 +95,8 @@ def main(argv=None):
                                   args.page_size, args.prefill_chunk)
         eng = ServeEngine(cfg, params, max_len=max_len,
                           page_size=args.page_size, num_pages=args.num_pages,
-                          paged_attn=args.paged_attn)
+                          paged_attn=args.paged_attn,
+                          prefix_cache=args.prefix_cache)
         lo = min(2, args.prompt_len)
         reqs = [Request(uid=i,
                         prompt=rng.integers(
@@ -102,6 +118,7 @@ def main(argv=None):
             "tokens_per_s": round(out["tokens_per_s"], 2),
             "requests_per_s": round(out["requests_per_s"], 2),
             "gen_len": [r.gen_len for r in out["results"]],
+            "cached_prompt_tokens": out["cached_prompt_tokens"],
             "rejected": [(r.uid, r.reason) for r in out["rejected"]],
         }
         if args.page_size:

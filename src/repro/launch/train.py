@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 from typing import Any, Dict, Optional
 
@@ -24,7 +23,6 @@ import numpy as np
 from repro.ckpt.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, DataLoader
-from repro.distributed import sharding as shd
 from repro.launch.mesh import make_test_mesh
 from repro.models import api
 from repro.train import optimizer as opt_mod

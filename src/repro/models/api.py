@@ -3,7 +3,7 @@ and ShapeDtypeStruct input specs for the dry-run.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -143,6 +143,17 @@ def prefill_chunk(params, cache, tokens, true_len, cfg: ModelConfig, *,
     tokens (B, W) with W the static chunk width; only the first ``true_len``
     (traced) positions are real.  Returns the advanced cache — no logits:
     the last prompt token goes through the decode step, which produces them.
+
+    "Whatever state" includes a NONZERO cached start: the shared-prefix
+    serve path (serve/pages.py, DESIGN.md §7) seeds a request cache with
+    ``cached`` prompt positions gathered from the page pool and sets
+    ``len = cached`` — both chunk paths then continue the prompt from
+    there unchanged, because positions are absolute (``cache["len"]``-
+    relative rope and causal masks in ``ops.chunk_attention``, the scanned
+    ``decode_step`` respectively).  Families whose state does NOT all live
+    in the paged K/V (recurrent state, window ring buffers) cannot be
+    seeded this way — the prefix index no-ops for them and they always
+    start from 0 via full prefill.
 
     ``block=True`` takes the lm fused chunk path
     (``models/transformer.py::prefill_chunk``); the caller must guarantee a

@@ -14,8 +14,7 @@ device; selective-scan state update + attention over the window -> host.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

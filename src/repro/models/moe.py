@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
-from repro.models.layers import dense_init, linear
+from repro.models.layers import dense_init
 
 
 def moe_init(key, d_model: int, d_ff: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:

@@ -350,7 +350,12 @@ def prefill_chunk(params, cache, tokens: jnp.ndarray, true_len, cfg: ModelConfig
     the cache size, i.e. chunks are fed full-width back to back with only
     the LAST one padded — the scheduler's feeding order.  A misaligned
     start would make ``dynamic_update_slice`` clamp ``start + W`` back
-    into bounds and silently overwrite earlier positions.
+    into bounds and silently overwrite earlier positions.  The start need
+    NOT be zero: the shared-prefix serve path seeds ``len = cached`` from
+    the page pool and streams only the prompt tail through here — rope and
+    the causal mask are absolute-position, so the math is unchanged; the
+    pager rounds the cached length to a multiple of lcm(page, W) exactly
+    so this alignment precondition keeps holding (DESIGN.md §7).
 
     Returns the cache with ``len += true_len`` (no logits: chunked prefill
     feeds the last prompt token to the decode step, which produces them).

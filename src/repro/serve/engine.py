@@ -63,7 +63,7 @@ class ServeEngine(pages_mod.PagedEngineMixin):
     def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128,
                  fused: bool = True, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 paged_attn: str = "inplace"):
+                 paged_attn: str = "inplace", prefix_cache: str = "off"):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh if mesh is not None else make_test_mesh()
@@ -89,9 +89,11 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         self._pager = (pages_mod.HostPager(page_size, num_pages, max_len)
                        if page_size is not None else None)
         self._paged_attn = self.check_paged_attn(paged_attn)
+        self._prefix_cache_on = self.check_prefix_cache(prefix_cache)
         self._paging_active = False            # set by init_slot_cache
         self._seq_ax = None
         self._paged_step = None
+        self._b1_shape = None                  # B=1 request-cache eval_shape
         self._chunk_jit: Dict[int, Any] = {}   # keyed by chunk width
         # the lm fused chunk path needs every cache slot linear (non-ring)
         self._chunk_block_ok = (
@@ -323,6 +325,7 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 "paged_attn='gather' or the dense slot cache")
         self._paging_active = True
         pool = self._pager.reset(n_slots)
+        self._pager.prefix_on = self.prefix_sharing_active()
         with self.mesh:
             return pages_mod.make_pool(shape, self._slot_axes(),
                                        self._slot_seq_axes(),
@@ -358,6 +361,18 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
         with self.mesh:
             return api.init_cache(self.cfg, 1, self.max_len)
+
+    def seed_request_cache(self, cache, slot: int, cached_len: int):
+        """Prefix-aware prefill entry: B=1 request cache seeded with the
+        slot's matched prefix pages gathered from the pool, ``len`` set to
+        ``cached_len`` — the tail chunk stream continues from there."""
+        if self._b1_shape is None:
+            self._b1_shape = jax.eval_shape(
+                lambda: api.init_cache(self.cfg, 1, self.max_len))
+        with self.mesh:
+            return self.paged_seed(cache, slot, cached_len,
+                                   self._slot_axes(), self._slot_seq_axes(),
+                                   self._b1_shape)
 
     def prefill_chunk_slot(self, cache, chunk: np.ndarray, true_w: int):
         """Advance a B=1 request cache by one right-padded prompt chunk.
@@ -416,8 +431,9 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         n = int(tokens.shape[0])
         if self._paging_active:
             act = np.asarray(active, bool)
-            self._pager.pre_decode(act)
-            self._meter_kv_read(act)
+            with self.mesh:
+                cache = self.paged_pre_step(cache, act, self._slot_axes(),
+                                            self._slot_seq_axes())
             if self._paged_step is None:
                 ba, sa = self._slot_axes(), self._slot_seq_axes()
                 rcfg = self._ragged_cfg

@@ -45,6 +45,20 @@ attention math bit-for-bit), and ``scatter_token_tree`` writes back only
 the one new token per active slot — O(B × token bytes) pool traffic per
 step.
 
+Shared-prefix KV reuse (DESIGN.md §7): the pool is REF-COUNTED with
+copy-on-write semantics and carries a radix-style token-block-hash prefix
+index ``H(parent_key, page_tokens) -> page``.  With ``prefix_cache="on"``
+admission matches a prompt against the index, maps the shared full pages
+into the slot's table (refcount++, zero prefill work) and prefills only the
+unmatched tail — seeded from a gathered B=1 prefix view so the
+absolute-position chunk path continues from the cached position; completed
+full pages are published back.  Decode always appends to a private
+(refcount==1) tail page, with a CoW copy (or an unpublish, for a sole
+owner) when a whole-prompt match put the append position inside a shared
+page.  Freed published pages stay resident and matchable until evicted
+under pressure.  Reuse engages only when every dynamic cache leaf pages —
+ring/recurrent families run a no-op index, token-identical either way.
+
 Scope of the memory claim: paging shrinks the PERSISTENT cache state — the
 pool allocation and the peak pages-in-use that admission and the
 serve_bench gate reason about.  The default decode discipline
@@ -59,8 +73,10 @@ dense B=1 request cache until insertion, bounded by the scheduler's
 """
 from __future__ import annotations
 
+import hashlib
 import math
-from typing import Any, Dict, Optional
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,86 +127,293 @@ def round_len(n: int, *quanta: Optional[int]) -> int:
 # Host-side allocator (numpy only — the host owns the dynamic state)
 # ----------------------------------------------------------------------------
 class PagePool:
-    """Free-list page allocator with worst-case admission reservations.
+    """Ref-counted free-list page allocator with copy-on-write semantics and
+    a radix-style token-block-hash prefix index.
 
-    ``try_reserve(slot, n_tokens)`` claims the worst-case page count for a
-    request at admission time; ``ensure(slot, n_tokens)`` then draws pages
-    lazily as the sequence actually grows, which therefore never fails.
-    ``free_slot`` returns both the pages and the reservation.  Reservation
-    admission is deliberately conservative (no mid-decode preemption needed);
-    ``peak_pages_in_use`` records what was ever resident simultaneously.
+    Lifecycle (DESIGN.md §7): ``try_admit(slot, n_tokens, matched)`` claims
+    the worst-case count of NEW pages for a request at admission time and
+    maps any ``matched`` prefix pages into the slot's table (refcount++,
+    zero prefill work for them); ``ensure(slot, n_tokens)`` then draws
+    private pages lazily as the sequence actually grows, which therefore
+    never fails — under pressure a draw evicts the least-recently-released
+    refcount-0 index page instead of failing.  ``free_slot`` decrements
+    every mapped page's refcount; pages that hit zero return to the free
+    list, unless they are published in the prefix index, in which case they
+    stay resident (and matchable) until evicted.
+
+    The prefix index is a chained block hash
+    ``key = H(parent_key, page_token_ids)`` -> physical page, which is a
+    flat encoding of a radix tree over token blocks: matching walks the
+    chain page by page from the root and stops at the first miss, so a
+    lookup is O(matched pages) regardless of how many prefixes are stored.
+
+    Sharing invariant: a page with ``refcount > 1``, or one still published
+    in the index, is IMMUTABLE.  Writers (the decode append landing inside
+    a fully-matched last page) must call :meth:`cow_page` first, which
+    either hands back a private copy target (refcount>1 → the caller copies
+    the device bytes src→dst) or retires the index entry when the writer is
+    the sole owner (write-in-place, no copy).
+
+    Admission safety: with ``pinned`` = distinct pages referenced by >= 1
+    slot, ``R`` = outstanding worst-case new-page reservations and ``D`` =
+    pages already drawn under them, admission maintains
+    ``pinned + (R - D) <= capacity`` — so free + evictable pages always
+    cover every future draw and ``ensure`` cannot fail mid-decode.
+
+    ``double_free`` selects the free-after-free policy: ``"raise"``
+    (default) raises ValueError, ``"ignore"`` makes it a no-op.
+    Reserve-after-free of the same slot is the normal lifecycle and always
+    works; reserve-after-reserve (without a free between) raises.
     """
 
+    _ROOT_KEY = b"radix-root"
+
     def __init__(self, num_pages: int, page_size: int, n_slots: int,
-                 slot_pages: int):
+                 slot_pages: int, double_free: str = "raise"):
         if num_pages < 2:
             raise ValueError(f"num_pages must be >= 2 (page {SCRATCH_PAGE} "
                              f"is the reserved scratch page), got {num_pages}")
+        if double_free not in ("raise", "ignore"):
+            raise ValueError(f"double_free must be 'raise' or 'ignore', "
+                             f"got {double_free!r}")
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self.slot_pages = int(slot_pages)
+        self.double_free = double_free
         # logical->physical map; unallocated entries hit the scratch page
         self.table = np.full((n_slots, slot_pages), SCRATCH_PAGE, np.int32)
         self._free = list(range(num_pages - 1, SCRATCH_PAGE, -1))
         self._n_alloc = np.zeros(n_slots, np.int64)
-        self._reserved = np.zeros(n_slots, np.int64)
+        self._matched = np.zeros(n_slots, np.int64)  # leading SHARED pages
+        self._reserved = np.zeros(n_slots, np.int64)  # worst-case NEW pages
+        self._drawn = np.zeros(n_slots, np.int64)     # new pages drawn so far
+        self._live = np.zeros(n_slots, bool)
+        self.refcount = np.zeros(num_pages, np.int32)
+        self._index: Dict[bytes, int] = {}            # block-hash -> page
+        self._published: Dict[int, bytes] = {}        # page -> its index key
+        # refcount-0 published pages, oldest-released first (eviction order)
+        self._evictable: "OrderedDict[int, None]" = OrderedDict()
         self.total_reserved = 0
-        self.pages_in_use = 0
+        self.total_drawn = 0
+        self.pages_in_use = 0         # pinned pages (refcount >= 1), distinct
         self.peak_pages_in_use = 0
+        self.pages_allocated = 0      # cumulative private draws (KV stored)
+        self.evictions = 0
+        self.cow_copies = 0
 
     @property
     def capacity(self) -> int:
         """Allocatable pages (scratch excluded)."""
         return self.num_pages - 1
 
+    @property
+    def cached_pages(self) -> int:
+        """Refcount-0 pages kept resident by the prefix index (evictable)."""
+        return len(self._evictable)
+
+    @property
+    def index_pages(self) -> int:
+        """Pages currently published in the prefix index (any refcount)."""
+        return len(self._index)
+
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(int(n_tokens), 0) // self.page_size)
 
-    def try_reserve(self, slot: int, n_tokens: int) -> bool:
-        """Claim worst-case pages for a request; False if the pool is full."""
-        assert self._reserved[slot] == 0, f"slot {slot} already reserved"
-        need = self.pages_for(n_tokens)
-        if need > self.slot_pages:
+    # ------------------------------------------------------ radix prefix index
+    def page_key(self, parent: bytes, tokens: np.ndarray) -> bytes:
+        """Chained block hash: one radix-tree edge per full token page."""
+        h = hashlib.blake2b(parent, digest_size=16)
+        h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+        return h.digest()
+
+    def match_prefix(self, tokens: np.ndarray) -> List[int]:
+        """Longest-prefix match of ``tokens`` against the index, in FULL
+        pages: walk the hash chain from the root, stop at the first miss.
+        Returns the matched physical pages (possibly empty)."""
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        pages: List[int] = []
+        key = self._ROOT_KEY
+        for p in range(len(tokens) // ps):
+            nxt = self.page_key(key, tokens[p * ps:(p + 1) * ps])
+            page = self._index.get(nxt)
+            if page is None:
+                break
+            pages.append(page)
+            key = nxt
+        return pages
+
+    def publish(self, slot: int, tokens: np.ndarray, n_tokens: int) -> int:
+        """Publish the slot's completed full pages into the prefix index.
+
+        ``tokens`` are the slot's prompt tokens, ``n_tokens`` how many the
+        slot actually holds (its prefilled body).  Only pages FULLY covered
+        by ``n_tokens`` are publishable — decode never writes below that
+        boundary, so published content is final.  Existing entries win (a
+        concurrent identical prefill keeps its pages private).  Returns the
+        number of new index entries."""
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        nfull = min(int(n_tokens) // ps, int(self._n_alloc[slot]),
+                    len(tokens) // ps)
+        key = self._ROOT_KEY
+        added = 0
+        for p in range(nfull):
+            key = self.page_key(key, tokens[p * ps:(p + 1) * ps])
+            page = int(self.table[slot, p])
+            if key in self._index or page in self._published:
+                continue
+            self._index[key] = page
+            self._published[page] = key
+            added += 1
+        return added
+
+    def _unpublish(self, page: int) -> None:
+        key = self._published.pop(page)
+        del self._index[key]
+        self._evictable.pop(page, None)
+
+    # --------------------------------------------------------------- admission
+    def try_admit(self, slot: int, n_tokens: int,
+                  matched: Sequence[int] = (), extra_new: int = 0) -> bool:
+        """Admission: map ``matched`` prefix pages into the slot's table
+        (refcount++) and claim worst-case NEW pages for the rest.  False if
+        the pool cannot take the request right now.  ``extra_new`` reserves
+        additional headroom (the CoW copy target when the match covers the
+        decode append position)."""
+        if self._live[slot]:
+            raise ValueError(
+                f"slot {slot} already reserved — reserve/admit must be "
+                f"paired with free_slot")
+        need_total = self.pages_for(n_tokens)
+        matched = list(matched)[:need_total]
+        need_new = need_total - len(matched) + int(extra_new)
+        if need_total > self.slot_pages:
             return False              # longer than one slot's page table
-        if self.total_reserved + need > self.capacity:
+        newly = sum(1 for p in matched if self.refcount[p] == 0)
+        if (self.pages_in_use + newly + self.total_reserved + need_new
+                - self.total_drawn > self.capacity):
             return False
-        self._reserved[slot] = need
-        self.total_reserved += need
+        for i, p in enumerate(matched):
+            if self.refcount[p] == 0:
+                self.pages_in_use += 1
+                self._evictable.pop(p, None)
+            self.refcount[p] += 1
+            self.table[slot, i] = p
+        self._n_alloc[slot] = len(matched)
+        self._matched[slot] = len(matched)
+        self._reserved[slot] = need_new
+        self._drawn[slot] = 0
+        self._live[slot] = True
+        self.total_reserved += need_new
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
         return True
 
+    def try_reserve(self, slot: int, n_tokens: int) -> bool:
+        """Claim worst-case pages for a request; False if the pool is full.
+        (The no-sharing admission path: ``try_admit`` with no matches.)"""
+        return self.try_admit(slot, n_tokens)
+
+    def _take_page(self) -> int:
+        """Draw a free page; under pressure, evict the oldest-released
+        refcount-0 index page (its content is recomputable by definition —
+        it was published from a prompt prefix)."""
+        if self._free:
+            return self._free.pop()
+        page, _ = self._evictable.popitem(last=False)
+        self._unpublish(page)
+        self.evictions += 1
+        return page
+
     def ensure(self, slot: int, n_tokens: int) -> None:
-        """Allocate pages so the slot can hold ``n_tokens`` positions."""
+        """Allocate private pages so the slot can hold ``n_tokens``."""
         need = self.pages_for(n_tokens)
-        assert need <= self._reserved[slot], \
-            (f"slot {slot} needs {need} pages but reserved only "
-             f"{self._reserved[slot]} — reservation bug")
         while self._n_alloc[slot] < need:
-            page = self._free.pop()   # cannot fail: alloc <= reservation
+            assert self._drawn[slot] < self._reserved[slot], \
+                (f"slot {slot} drew {self._drawn[slot]} of "
+                 f"{self._reserved[slot]} reserved pages but needs more — "
+                 f"reservation bug")
+            page = self._take_page()  # cannot fail: admission invariant
+            self.refcount[page] = 1
             self.table[slot, self._n_alloc[slot]] = page
             self._n_alloc[slot] += 1
+            self._drawn[slot] += 1
+            self.total_drawn += 1
             self.pages_in_use += 1
+            self.pages_allocated += 1
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
 
+    def cow_page(self, slot: int, logical: int) -> Optional[Tuple[int, int]]:
+        """Make the slot's ``logical`` page writable (the CoW rule).
+
+        refcount > 1 → draw a private target under the slot's reservation
+        and return ``(src, dst)``: the caller must copy the device page
+        bytes before writing.  Sole owner but still published → retire the
+        index entry and write in place (no copy).  Private and unpublished
+        → None, nothing to do.
+        """
+        src = int(self.table[slot, logical])
+        if self.refcount[src] > 1:
+            assert self._drawn[slot] < self._reserved[slot], \
+                (f"slot {slot} has no reserved page left for the CoW copy "
+                 f"of logical page {logical} — admission bug")
+            dst = self._take_page()
+            self.refcount[dst] = 1
+            self.refcount[src] -= 1
+            self.table[slot, logical] = dst
+            self._drawn[slot] += 1
+            self.total_drawn += 1
+            self.pages_in_use += 1
+            self.pages_allocated += 1
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use)
+            self.cow_copies += 1
+            return (src, dst)
+        if src in self._published:
+            self._unpublish(src)
+        return None
+
     def free_slot(self, slot: int) -> None:
-        """Return the slot's pages and reservation to the pool."""
-        n = int(self._n_alloc[slot])
-        for i in range(n):
-            self._free.append(int(self.table[slot, i]))
+        """Release the slot: decrement every mapped page's refcount and
+        return the reservation.  Pages hitting refcount 0 go back to the
+        free list unless published — those stay resident in the prefix
+        index (evictable under pressure) so later requests can share them.
+        """
+        if not self._live[slot]:
+            if self.double_free == "ignore":
+                return
+            raise ValueError(
+                f"double free: slot {slot} is not reserved (free_slot "
+                f"without a matching try_reserve/try_admit)")
+        for i in range(int(self._n_alloc[slot])):
+            p = int(self.table[slot, i])
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.pages_in_use -= 1
+                if p in self._published:
+                    self._evictable[p] = None   # resident, matchable, LRU
+                else:
+                    self._free.append(p)
         self.table[slot, :] = SCRATCH_PAGE
-        self.pages_in_use -= n
         self._n_alloc[slot] = 0
+        self._matched[slot] = 0
         self.total_reserved -= int(self._reserved[slot])
+        self.total_drawn -= int(self._drawn[slot])
         self._reserved[slot] = 0
+        self._drawn[slot] = 0
+        self._live[slot] = False
 
 
 class HostPager:
     """The host-side paging companion both engines own when ``page_size``
     is set: PagePool lifecycle, the per-slot length mirror (so the decode
-    loop never syncs ``len`` off the device), admission queries, and byte
-    accounting.  The jitted gather/scatter programs stay with each engine
-    (they bind its own decode step); every host-side decision lives here
-    exactly once.
+    loop never syncs ``len`` off the device), admission queries (now
+    prefix-matching against the pool's radix index), CoW scheduling, and
+    byte accounting.  The jitted gather/scatter/seed programs stay with
+    each engine (they bind its own decode step); every host-side decision
+    lives here exactly once.
     """
 
     def __init__(self, page_size: int, num_pages: Optional[int],
@@ -206,15 +429,23 @@ class HostPager:
         self.pool: Optional[PagePool] = None
         self.host_len = None
         self._table_dev = None     # device copy, invalidated on table writes
+        # prefix sharing: armed by the engine's init_slot_cache when the
+        # knob is on AND every dynamic cache leaf actually pages
+        self.prefix_on = False
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
 
     def reset(self, n_slots: int) -> PagePool:
-        """Fresh pool + length mirror for a new slot cache."""
+        """Fresh pool (and prefix index) + length mirror for a new slot
+        cache."""
         num_pages = (self._num_pages_opt if self._num_pages_opt is not None
                      else n_slots * self.slot_pages + 1)   # +1: scratch
         self.pool = PagePool(num_pages, self.page_size, n_slots,
                              self.slot_pages)
         self.host_len = np.zeros((n_slots,), np.int64)
         self._table_dev = None
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
         return self.pool
 
     def _tokens_for(self, prompt_len: int, max_new: int) -> int:
@@ -224,10 +455,61 @@ class HostPager:
         return self.pool.try_reserve(slot,
                                      self._tokens_for(prompt_len, max_new))
 
+    def admit(self, slot: int, prompt: np.ndarray, max_new: int,
+              chunk: Optional[int] = None) -> Optional[int]:
+        """Admission with radix prefix matching.
+
+        Matches the prompt against the index in full pages, maps the
+        matched pages into the slot's table (refcount++) and reserves
+        worst-case NEW pages for the rest.  Returns the number of CACHED
+        tokens (0 = no reuse), or None when the pool cannot take the
+        request right now (the scheduler waits for frees).
+
+        Match capping rules (DESIGN.md §7):
+          * a match covering the whole prompt body skips prefill entirely
+            (``cached = body``); when it overshoots the body — the full
+            prompt including the decode-input token is indexed — the last
+            matched page contains the decode append position, so one extra
+            page is reserved for its CoW copy;
+          * a partial match is rounded DOWN to a multiple of
+            ``lcm(page_size, chunk)`` so the tail chunk stream starts
+            chunk-aligned (the lm block chunk path writes full fixed-width
+            chunks); without chunked prefill (``chunk=None``) only
+            whole-body matches are usable, partial ones are dropped.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        body = len(prompt) - 1
+        total = self._tokens_for(len(prompt), max_new)
+        if not self.prefix_on or body < 1:
+            return 0 if self.pool.try_admit(slot, total) else None
+        pages = self.pool.match_prefix(prompt)
+        m_tok = len(pages) * self.page_size
+        cow = 0
+        if pages and m_tok >= body:
+            cached = body
+            cow = 1 if m_tok > body else 0
+        elif pages and chunk:
+            quantum = math.lcm(self.page_size, int(chunk))
+            m_tok = (m_tok // quantum) * quantum
+            pages = pages[:m_tok // self.page_size]
+            cached = m_tok
+        else:
+            pages, cached = [], 0
+        if not self.pool.try_admit(slot, total, matched=pages,
+                                   extra_new=cow):
+            return None
+        if cached:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += cached
+            self._table_dev = None
+        return cached
+
     def can_ever_admit(self, prompt_len: int, max_new: int) -> bool:
         """Static capacity check: could this request be admitted into an
         IDLE pool?  False means waiting for frees can never help — the
-        scheduler rejects immediately instead of head-of-line blocking."""
+        scheduler rejects immediately instead of head-of-line blocking.
+        (Deliberately prefix-blind: a hit could shrink the new-page need,
+        but index contents are transient, so admission stays worst-case.)"""
         need = self.pool.pages_for(self._tokens_for(prompt_len, max_new))
         return need <= min(self.pool.slot_pages, self.pool.capacity)
 
@@ -247,11 +529,34 @@ class HostPager:
         self._ensure(slot, n_tokens)
         self.host_len[slot] = n_tokens
 
-    def pre_decode(self, active: np.ndarray) -> None:
-        """Allocate any page the coming decode step writes into (each
-        active slot writes at position ``len``)."""
+    def publish(self, slot: int, prompt: np.ndarray) -> int:
+        """Publish the slot's completed full prefill pages (positions below
+        its prefilled body) into the prefix index.  No-op when prefix
+        sharing is off."""
+        if not self.prefix_on:
+            return 0
+        prompt = np.asarray(prompt, np.int32)
+        return self.pool.publish(slot, prompt, int(self.host_len[slot]))
+
+    def pre_decode(self, active: np.ndarray) -> List[Tuple[int, int]]:
+        """Make every active slot's append position writable and allocated.
+
+        Each active slot writes at position ``len``: if that position falls
+        inside a SHARED or published page (a whole-prompt prefix hit), the
+        CoW rule fires first — returns the ``(src, dst)`` physical page
+        pairs whose device bytes the engine must copy before dispatching
+        the step.  Then allocates any fresh page the step grows into."""
+        copies: List[Tuple[int, int]] = []
         for s in np.flatnonzero(active):
-            self._ensure(s, int(self.host_len[s]) + 1)
+            pos = int(self.host_len[s])
+            pi = pos // self.page_size
+            if pi < int(self.pool._n_alloc[s]):
+                op = self.pool.cow_page(int(s), pi)
+                if op is not None:
+                    copies.append(op)
+                    self._table_dev = None
+            self._ensure(s, pos + 1)
+        return copies
 
     def post_decode(self, active: np.ndarray) -> None:
         self.host_len[active] += 1
@@ -266,6 +571,16 @@ class HostPager:
     def row(self, slot: int) -> jnp.ndarray:
         return jnp.asarray(self.pool.table[slot])
 
+    def insert_row(self, slot: int) -> jnp.ndarray:
+        """Table row for the slot's INSERT program: matched prefix entries
+        are redirected to the scratch page, so the B=1 request cache's
+        blocks land only on the slot's private tail pages — the shared
+        prefix pages are never written (they already hold the content the
+        seed gathered from them)."""
+        row = self.pool.table[slot].copy()
+        row[:int(self.pool._matched[slot])] = SCRATCH_PAGE
+        return jnp.asarray(row)
+
     def stats(self, cache: Any, sa: Any) -> Dict[str, int]:
         """Resident-cache accounting for the paged-vs-dense benchmark."""
         total = sum(int(a.nbytes) for a in jax.tree.leaves(cache))
@@ -279,9 +594,29 @@ class HostPager:
             "page_bytes": page_bytes,
             "pages_in_use": self.pool.pages_in_use,
             "peak_pages_in_use": self.pool.peak_pages_in_use,
+            "pages_allocated": self.pool.pages_allocated,
             "peak_kv_bytes_in_use":
                 dense_leaves + self.pool.peak_pages_in_use * page_bytes,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "index_pages": self.pool.index_pages,
+            "cached_index_pages": self.pool.cached_pages,
+            "evictions": self.pool.evictions,
+            "cow_copies": self.pool.cow_copies,
         }
+
+
+def _path_entry_key(entry) -> Any:
+    """The dict key / attr name / sequence index of one KeyPath entry."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return getattr(entry, attr)
+    return None
+
+
+def _is_len_path(path) -> bool:
+    """True for the cache's ``len`` leaf (the per-slot length vector)."""
+    return bool(path) and _path_entry_key(path[-1]) == "len"
 
 
 class PagedEngineMixin:
@@ -299,12 +634,27 @@ class PagedEngineMixin:
     tokens) KV reads per slot); ``"gather"`` keeps the PR-3 reference path
     (gather dense view -> family ``decode_step`` -> scatter one token) as
     the fallback/oracle the parity suite checks the kernel against.
+
+    ``prefix_cache`` arms shared-prefix KV reuse (DESIGN.md §7): admission
+    radix-matches the prompt against the pool's block-hash index, maps the
+    matched full pages into the slot's table (refcount++, zero prefill
+    work) and only the unmatched tail is prefilled — seeded from a
+    gathered B=1 prefix view so the absolute-position chunk attention
+    continues from the cached position.  It engages only when EVERY
+    dynamic cache leaf pages (``len`` aside): recurrent state and
+    sliding-window ring buffers are slot-private dense leaves that a
+    shared page cannot restore, so those families run a no-op index and
+    fall back to full prefill — token-identical either way.
     """
 
     _pager: Optional[HostPager] = None
     _paging_active: bool = False
     _paged_insert_jit = None
     _paged_attn: str = "inplace"
+    _prefix_cache_on: bool = False
+    _prefix_shareable: bool = False
+    _seed_jit = None
+    _cow_jit = None
     _kv_tok_bytes: int = 0       # per-token-per-slot seq-scaling cache bytes
     _slot_count: int = 0
 
@@ -328,12 +678,27 @@ class PagedEngineMixin:
                 f"paged_attn must be 'inplace' or 'gather', got {paged_attn!r}")
         return paged_attn
 
+    @staticmethod
+    def check_prefix_cache(prefix_cache: str) -> bool:
+        if prefix_cache not in ("on", "off"):
+            raise ValueError(
+                f"prefix_cache must be 'on' or 'off', got {prefix_cache!r}")
+        return prefix_cache == "on"
+
     def _note_slot_cache(self, n_slots: int, cache_shape: Any, ba: Any,
                          sa: Any) -> None:
         """Record the slot-cache geometry the KV-read accounting needs
-        (called by both engines' ``init_slot_cache``, every layout)."""
+        (called by both engines' ``init_slot_cache``, every layout), and
+        decide prefix shareability: reuse is sound only when every dynamic
+        cache leaf pages — a leaf that batch-indexes but does NOT page
+        (ring K/V, recurrent state) is slot-private state a shared page
+        cannot restore, so its presence demotes the prefix index to a
+        no-op (``len`` is exempt: the seed program sets it directly)."""
         self._slot_count = int(n_slots)
         self._kv_tok_bytes = kv_token_bytes(cache_shape, ba, sa)
+        leaves = jax.tree_util.tree_flatten_with_path(sa)[0]
+        self._prefix_shareable = all(
+            ax >= 0 or _is_len_path(path) for path, ax in leaves)
 
     # ------------------------------------------------ host KV-read accounting
     def _dense_view_read_bytes(self) -> int:
@@ -380,7 +745,10 @@ class PagedEngineMixin:
         """Admit one prefilled B=1 dense cache into the pool: allocate the
         slot's pages, then scatter its page blocks through the (traced)
         table row — one compiled program for every slot and assignment.
-        Callers wrap this in their mesh context where needed."""
+        Matched prefix entries of the row are redirected to scratch
+        (``HostPager.insert_row``): the shared pages already hold the
+        prefix content and must never be written.  Callers wrap this in
+        their mesh context where needed."""
         self._pager.note_insert(slot, n_tokens)
         if self._paged_insert_jit is None:
             def insert(pcache, single, row, s):
@@ -388,13 +756,118 @@ class PagedEngineMixin:
 
             self._paged_insert_jit = jax.jit(insert, donate_argnums=(0,))
         return self._paged_insert_jit(batched_cache, single_cache,
-                                      self._pager.row(slot),
+                                      self._pager.insert_row(slot),
                                       jnp.int32(slot))
+
+    # ------------------------------------------------- shared-prefix KV reuse
+    def prefix_cache_armed(self) -> bool:
+        """Whether the engine was CONSTRUCTED with the prefix cache on (a
+        pre-``init_slot_cache`` predicate — shareability is not known yet).
+        The scheduler's warmup keys its prefix warm trace on this."""
+        return (self._prefix_cache_on
+                and getattr(self, "page_size", None) is not None)
+
+    def prefix_sharing_active(self) -> bool:
+        """Whether admission actually radix-matches: the knob is on, the
+        slot cache pages, and every dynamic leaf is poolable."""
+        return (self._paging_active and self._prefix_cache_on
+                and self._prefix_shareable)
+
+    def admit_slot(self, slot: int, prompt: np.ndarray, max_new: int,
+                   chunk: Optional[int] = None) -> Optional[int]:
+        """Admission control with prefix reuse: returns the CACHED token
+        count (0 = admitted with no reuse; dense engines always 0), or
+        None when the paged pool cannot take the request right now and the
+        scheduler should wait for running requests to free pages.
+        ``chunk`` is the scheduler's prefill chunk width (alignment quantum
+        for partial matches)."""
+        if not self._paging_active:
+            return 0
+        cached = self._pager.admit(
+            slot, prompt, max_new,
+            chunk if self.prefix_sharing_active() else None)
+        if cached:
+            # host-local accounting channel (excluded from eq. 7-10): the
+            # prefill KV bytes the prefix hit did NOT recompute/store
+            self.meter.host_read("prefix_prefill_saved",
+                                 cached * self._kv_tok_bytes)
+        return cached
+
+    def publish_prefix(self, slot: int, prompt: np.ndarray) -> None:
+        """Publish the slot's completed full prefill pages into the prefix
+        index (post-insert hook; no-op when sharing is inactive)."""
+        if self._paging_active:
+            self._pager.publish(slot, prompt)
+
+    def paged_seed(self, batched_cache, slot: int, cached_len: int,
+                   ba: Any, sa: Any, b1_shape: Any):
+        """The prefix-aware prefill entry: gather the slot's matched prefix
+        pages into a fresh B=1 request cache with ``len = cached_len``.
+        The tail chunk stream (``prefill_chunk_slot``) continues from that
+        position — the absolute-position chunk attention path needs no
+        change.  ``b1_shape`` is the engine's B=1 request-cache eval_shape
+        (same pytree as the slot cache).  One compiled program covers
+        every slot, match length and page assignment (row/len traced)."""
+        if self._seed_jit is None:
+            def seed(pcache, row, m):
+                def leaf(path, sh, b_ax, s_ax, pl):
+                    if s_ax >= 0:
+                        return gather_view(pl, row[None, :], b_ax, s_ax)
+                    if _is_len_path(path):
+                        return jnp.full(sh.shape, m, sh.dtype)
+                    # unreachable when prefix sharing is active (the
+                    # shareability rule excludes other dense leaves), but
+                    # keep the seed total
+                    return jnp.zeros(sh.shape, sh.dtype)
+
+                return jax.tree_util.tree_map_with_path(
+                    leaf, b1_shape, ba, sa, pcache)
+
+            self._seed_jit = jax.jit(seed)
+        return self._seed_jit(batched_cache, self._pager.row(slot),
+                              jnp.int32(cached_len))
+
+    def apply_cow_copies(self, cache, copies, ba: Any, sa: Any):
+        """Copy the device bytes of each CoW'd page (src -> dst) in every
+        pool leaf.  Compiles once (traced page ids); runs only on CoW
+        events — a whole-prompt prefix hit's first decode step — never in
+        the steady state."""
+        if not copies:
+            return cache
+        if self._cow_jit is None:
+            def copy(pcache, src, dst):
+                def leaf(p, b_ax, s_ax):
+                    if s_ax < 0:
+                        return p
+                    pl = _pages_leading(p, b_ax, s_ax)
+                    pl = pl.at[dst].set(pl[src])
+                    return _pages_restore(pl, b_ax, s_ax)
+
+                return jax.tree.map(leaf, pcache, ba, sa)
+
+            self._cow_jit = jax.jit(copy, donate_argnums=(0,))
+        page_bytes = self._kv_tok_bytes * self._pager.page_size
+        for src, dst in copies:
+            cache = self._cow_jit(cache, jnp.int32(src), jnp.int32(dst))
+            self.meter.host_read("page_cow_copy", page_bytes)
+        return cache
+
+    def paged_pre_step(self, cache, active: np.ndarray, ba: Any, sa: Any):
+        """Host work before one paged decode step: CoW-protect and allocate
+        every active slot's append position, apply any required page
+        copies, and meter the step's KV reads.  Returns the (possibly
+        copied-into) cache."""
+        copies = self._pager.pre_decode(active)
+        cache = self.apply_cow_copies(cache, copies, ba, sa)
+        self._meter_kv_read(active)
+        return cache
 
     def reserve_slot(self, slot: int, prompt_len: int, max_new: int) -> bool:
         """Admission control: claim worst-case pages for a request.  Dense
         slot caches always admit; a paged pool may ask the scheduler to
-        wait until running requests free pages."""
+        wait until running requests free pages.  (The prefix-aware entry
+        point is :meth:`admit_slot`; this stays as the plain-reservation
+        protocol hook.)"""
         if not self._paging_active:
             return True
         return self._pager.try_reserve(slot, prompt_len, max_new)

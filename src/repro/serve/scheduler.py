@@ -33,6 +33,15 @@ paper's LM configs).  With a paged engine (``page_size=...``), admission
 additionally reserves worst-case KV pages and EOS returns them to the
 shared pool, so resident KV bytes track live tokens (DESIGN.md §5).
 
+With the engine's prefix cache armed (``prefix_cache="on"``), admission
+goes through ``admit_slot``: the prompt is radix-matched against the
+pool's block-hash index, matched full pages map into the slot with zero
+prefill work (reservation counts only NEW pages), and the unmatched tail
+streams through chunked prefill from a seeded B=1 cache; completed full
+pages publish back to the index at insert (DESIGN.md §7).  Per-request
+``cached_tokens``, ``queue_wait_s`` and ``ttft_s`` ship on every
+``RequestResult``.
+
 TrafficMeter accounting stays byte-exact per *active* token: a request
 admitted at T0 and stopped after g tokens crosses the boundary exactly
 (T0 - 1 + g) times, the same count the fused one-request ``generate()``
@@ -67,6 +76,9 @@ class RequestResult:
     prompt_len: int
     admitted_s: float
     finished_s: float
+    cached_tokens: int = 0        # prompt tokens served from the prefix cache
+    queue_wait_s: float = 0.0     # arrival (or loop start) -> admission
+    ttft_s: float = 0.0           # arrival (or loop start) -> first token
 
 
 @dataclasses.dataclass
@@ -80,17 +92,22 @@ class _SlotState:
     req: Request
     tokens: List[int]
     admitted_s: float
+    cached: int = 0
+    first_token_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class _PrefillJob:
     """A request whose prompt is being fed chunk-by-chunk into a B=1 cache
-    (the slot is held but inactive until the last chunk is inserted)."""
+    (the slot is held but inactive until the last chunk is inserted).
+    ``cached`` prompt tokens were served from the prefix cache: the B=1
+    cache was seeded with them and the chunk stream starts there."""
     slot: int
     req: Request
     cache: Any
     consumed: int
     admitted_s: float
+    cached: int = 0
 
 
 class ContinuousBatchingScheduler:
@@ -130,10 +147,37 @@ class ContinuousBatchingScheduler:
     def warmup(self, prompt_len: int = 4, max_new: int = 2) -> None:
         """Compile the steady-state programs (prefill bucket / chunk,
         insert, slot step) before timing starts; leaves the TrafficMeter
-        untouched."""
-        prompt = np.ones((prompt_len,), np.int32)
-        req = Request(uid=-1, prompt=prompt, max_new=max_new)
-        self.run([req])
+        untouched.
+
+        With an engine whose prefix cache is armed, the warm trace also
+        exercises the sharing programs: a page-aligned prompt is published,
+        then a whole-prefix repeat of it forces the seed gather AND the CoW
+        page copy (its decode append lands inside the shared last page).
+        ``max_prefill_jobs`` is pinched to 1 for the warm run so the
+        publisher's insert lands before the repeat is admitted — otherwise
+        both would miss the index and nothing prefix-specific compiles.
+        """
+        eng = self.engine
+        ps = getattr(eng, "page_size", None)
+        reqs = [Request(uid=-1, prompt=np.ones((prompt_len,), np.int32),
+                        max_new=max_new)]
+        prefix_armed = (hasattr(eng, "prefix_cache_armed")
+                        and eng.prefix_cache_armed())
+        if prefix_armed and 2 * ps + max_new <= eng.max_len:
+            # publisher: body = 2*ps (two publishable full pages);
+            # repeat: its full prompt is a strict prefix of the published
+            # body -> whole-body match overshooting into the last page
+            long = np.arange(1, 2 * ps + 2, dtype=np.int32)   # T0 = 2ps+1
+            reqs = [Request(uid=-3, prompt=long, max_new=max_new),
+                    Request(uid=-2, prompt=long[:2 * ps].copy(),
+                            max_new=max_new)]
+        jobs = self.max_prefill_jobs
+        try:
+            if prefix_armed:
+                self.max_prefill_jobs = 1
+            self.run(reqs)
+        finally:
+            self.max_prefill_jobs = jobs
         self.engine.meter.reset()
 
     # ------------------------------------------------------------- admission
@@ -187,6 +231,7 @@ class ContinuousBatchingScheduler:
         steps = 0
         decoded_tokens = 0
         prefill_tokens = 0
+        cached_tokens = 0
         slept_s = 0.0
         t_start = time.perf_counter()
 
@@ -196,28 +241,54 @@ class ContinuousBatchingScheduler:
         def in_flight() -> bool:
             return bool(states) or bool(prefilling)
 
-        def start(req: Request, slot: int) -> None:
-            nonlocal cache, prefill_tokens
+        def activate(slot: int, req: Request, tok: int, admitted_s: float,
+                     cached: int) -> None:
+            tokens[slot] = tok
+            active[slot] = True
+            states[slot] = _SlotState(req, [], admitted_s, cached)
+
+        def start(req: Request, slot: int, cached: int = 0) -> None:
+            nonlocal cache, prefill_tokens, cached_tokens
             body = len(req.prompt) - 1
+            cached_tokens += cached
+            if cached > 0:
+                # prefix hit: seed a B=1 request cache with the matched
+                # pages gathered from the pool; only the unmatched tail is
+                # prefilled (chunk stream continuing at position ``cached``)
+                seeded = eng.seed_request_cache(cache, slot, cached)
+                if cached < body:
+                    prefilling.append(_PrefillJob(
+                        slot, req, seeded, cached, now(), cached))
+                    return
+                # whole-body hit: nothing to prefill, go straight to decode
+                cache = eng.insert_slot(cache, seeded, slot)
+                eng.publish_prefix(slot, req.prompt)
+                activate(slot, req, int(req.prompt[-1]), now(), cached)
+                return
             if chunk is not None and body > 0:
                 prefilling.append(_PrefillJob(
                     slot, req, eng.new_request_cache(), 0, now()))
                 return
             slot_cache, tok = eng.prefill_slot(req.prompt)
             cache = eng.insert_slot(cache, slot_cache, slot)
+            if hasattr(eng, "publish_prefix"):
+                eng.publish_prefix(slot, req.prompt)
             prefill_tokens += body
-            tokens[slot] = tok
-            active[slot] = True
-            states[slot] = _SlotState(req, [], now())
+            activate(slot, req, tok, now(), 0)
 
         def finish(slot: int, st: _SlotState) -> None:
+            t = now()
             results.append(RequestResult(
                 uid=st.req.uid,
                 tokens=np.asarray(st.tokens, np.int32),
                 gen_len=len(st.tokens),
                 prompt_len=len(st.req.prompt),
                 admitted_s=st.admitted_s,
-                finished_s=now()))
+                finished_s=t,
+                cached_tokens=st.cached,
+                queue_wait_s=max(0.0, st.admitted_s - st.req.arrival_s),
+                ttft_s=max(0.0, (st.first_token_s if st.first_token_s
+                                 is not None else t) - st.req.arrival_s)))
             active[slot] = False
             free.append(slot)
             del states[slot]
@@ -248,7 +319,18 @@ class ContinuousBatchingScheduler:
                     # queue behind a request no amount of frees can admit
                     reject_pool(req)
                     continue
-                if hasattr(eng, "reserve_slot") and not eng.reserve_slot(
+                cached = 0
+                if hasattr(eng, "admit_slot"):
+                    # prefix-aware admission: radix-match the prompt, map
+                    # shared pages into the slot, reserve only NEW pages
+                    cached = eng.admit_slot(slot, req.prompt, req.max_new,
+                                            chunk)
+                    if cached is None:
+                        if not in_flight():
+                            reject_pool(req)
+                            continue
+                        break         # wait for running requests to free
+                elif hasattr(eng, "reserve_slot") and not eng.reserve_slot(
                         slot, len(req.prompt), req.max_new):
                     if not in_flight():
                         # backstop (engines without can_ever_admit): an
@@ -258,7 +340,7 @@ class ContinuousBatchingScheduler:
                     break                 # wait for running requests to free
                 pending.popleft()
                 free.pop()
-                start(req, slot)
+                start(req, slot, cached)
             # ---- chunked prefill: at most ONE chunk per iteration, so a
             #      long prompt adds bounded latency per decode step
             if prefilling:
@@ -272,11 +354,11 @@ class ContinuousBatchingScheduler:
                 if job.consumed == body:
                     prefilling.popleft()
                     cache = eng.insert_slot(cache, job.cache, job.slot)
-                    prefill_tokens += body
-                    tokens[job.slot] = int(job.req.prompt[-1])
-                    active[job.slot] = True
-                    states[job.slot] = _SlotState(job.req, [],
-                                                  job.admitted_s)
+                    if hasattr(eng, "publish_prefix"):
+                        eng.publish_prefix(job.slot, job.req.prompt)
+                    prefill_tokens += body - job.cached
+                    activate(job.slot, job.req, int(job.req.prompt[-1]),
+                             job.admitted_s, job.cached)
             if not active.any():
                 if not prefilling and realtime and pending:
                     t0 = time.perf_counter()
@@ -289,9 +371,12 @@ class ContinuousBatchingScheduler:
             steps += 1
             decoded_tokens += n_active
             nxt = np.asarray(nxt)
+            t_step = now()
             for slot in np.flatnonzero(active):
                 st = states[slot]
                 tok = int(nxt[slot])
+                if st.first_token_s is None:
+                    st.first_token_s = t_step
                 st.tokens.append(tok)
                 done = (len(st.tokens) >= st.req.max_new
                         or (self.eos_id is not None and tok == self.eos_id))
@@ -304,8 +389,12 @@ class ContinuousBatchingScheduler:
         busy_s = wall_s - slept_s
         # Boundary accounting, replayed ONCE per run so the steady-state
         # loop's meter log stays O(1): only active slots ever cross, so the
-        # total is exactly sum over requests of (T0 - 1 + gen) tokens —
-        # byte-identical to per-step replay (crossings are linear in count).
+        # total is exactly sum over requests of (T0 - 1 - cached + gen)
+        # tokens — byte-identical to per-step replay (crossings are linear
+        # in count).  Prefix-cached prompt tokens never cross: their K/V
+        # was neither recomputed nor re-shipped (the saved bytes land on
+        # the excluded "prefix_prefill_saved" host channel instead, so the
+        # eq. 7-10 exactness contract holds with the cache on or off).
         eng.meter_tokens(prefill_tokens + decoded_tokens)
         self.cache = cache
         results.sort(key=lambda r: r.uid)
@@ -314,6 +403,8 @@ class ContinuousBatchingScheduler:
             "rejected": rejected,
             "steps": steps,
             "decoded_tokens": decoded_tokens,
+            "prefill_tokens": prefill_tokens,
+            "cached_prompt_tokens": cached_tokens,
             "wall_s": wall_s,
             "busy_s": busy_s,
             "slept_s": slept_s,

@@ -63,7 +63,7 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                  quantize: bool = True, jit: bool = True,
                  use_pallas: bool = False, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 paged_attn: str = "inplace"):
+                 paged_attn: str = "inplace", prefix_cache: str = "off"):
         assert cfg.family == "lm" and len(cfg.layer_pattern) == 1, \
             "split-brain reference engine covers the paper's LM configs"
         assert not cfg.moe, "split-brain reference engine covers dense FFNs"
@@ -110,8 +110,10 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         self._pager = (pages_mod.HostPager(page_size, num_pages, max_len)
                        if page_size is not None else None)
         self._paged_attn = self.check_paged_attn(paged_attn)
+        self._prefix_cache_on = self.check_prefix_cache(prefix_cache)
         self._paging_active = self._pager is not None   # k/v always page
         self._paged_step = None
+        self._b1_shape = None                  # B=1 request-cache eval_shape
 
     # ------------------------------------------------------------- device ops
     # The eager reference path: each helper registers its boundary crossing
@@ -484,6 +486,7 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         if not self._paging_active:
             return self.init_cache(n_slots)
         pool = self._pager.reset(n_slots)
+        self._pager.prefix_on = self.prefix_sharing_active()
         return pages_mod.make_pool(shape, self._SLOT_AXES, self._SEQ_AXES,
                                    pool.num_pages, self.page_size)
 
@@ -495,6 +498,15 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
     def new_request_cache(self) -> Dict[str, Any]:
         """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
         return self.init_cache(1)
+
+    def seed_request_cache(self, cache, slot: int, cached_len: int):
+        """Prefix-aware prefill entry: B=1 request cache seeded with the
+        slot's matched prefix pages gathered from the pool, ``len`` set to
+        ``cached_len`` — the tail chunk stream continues from there."""
+        if self._b1_shape is None:
+            self._b1_shape = jax.eval_shape(lambda: self.init_cache(1))
+        return self.paged_seed(cache, slot, cached_len, self._SLOT_AXES,
+                               self._SEQ_AXES, self._b1_shape)
 
     def prefill_chunk_slot(self, cache: Dict[str, Any], chunk: np.ndarray,
                            true_w: int) -> Dict[str, Any]:
@@ -581,8 +593,8 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         step, scatter one token back per active slot)."""
         if self._paging_active:
             act = np.asarray(active, bool)
-            self._pager.pre_decode(act)
-            self._meter_kv_read(act)
+            cache = self.paged_pre_step(cache, act, self._SLOT_AXES,
+                                        self._SEQ_AXES)
             if self._paged_step is None:
                 ba, sa = self._SLOT_AXES, self._SEQ_AXES
 

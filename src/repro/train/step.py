@@ -6,14 +6,13 @@ the exact callables the multi-pod dry-run lowers and compiles.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.distributed import sharding as shd
 from repro.models import api
 from repro.train import optimizer as opt

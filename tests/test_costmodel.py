@@ -3,7 +3,7 @@ VI/VII, Fig 3, eq. 7-11)."""
 import numpy as np
 import pytest
 
-from repro.core import costmodel, csd, fpga, splitbrain
+from repro.core import costmodel, fpga, splitbrain
 
 
 def test_table1_gate_counts():

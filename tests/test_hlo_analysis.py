@@ -2,7 +2,6 @@
 fusion-boundary slice accounting — validated against hand-computable programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H

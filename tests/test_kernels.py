@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
 swept over shapes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -25,7 +25,6 @@ from repro.configs import get_config
 from repro.configs.base import LayerSpec
 from repro.kernels import ref
 from repro.models import api
-from repro.serve import pages
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 from repro.serve.splitbrain_engine import SplitBrainEngine

@@ -48,6 +48,110 @@ def test_page_pool_reservation_admission_control():
 def test_page_pool_rejects_degenerate_sizes():
     with pytest.raises(ValueError):
         pages.PagePool(num_pages=1, page_size=4, n_slots=1, slot_pages=1)
+    with pytest.raises(ValueError):
+        pages.PagePool(num_pages=5, page_size=4, n_slots=1, slot_pages=4,
+                       double_free="maybe")
+
+
+def test_page_pool_double_free_policy():
+    """free-after-free is detected explicitly: ValueError under the default
+    'raise' policy, a silent no-op under 'ignore' — and the no-op must not
+    corrupt the free list (pages are returned exactly once).  Reserve-after-
+    free of the SAME slot is the normal lifecycle and succeeds; a second
+    reserve without a free between raises."""
+    pool = pages.PagePool(num_pages=5, page_size=4, n_slots=2, slot_pages=4)
+    assert pool.try_reserve(0, 8)
+    pool.ensure(0, 8)
+    pool.free_slot(0)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free_slot(0)
+    assert pool.try_reserve(0, 8)               # reserve-after-free: fine
+    with pytest.raises(ValueError, match="already reserved"):
+        pool.try_reserve(0, 4)                  # reserve-after-reserve: bug
+    pool.free_slot(0)
+
+    lax = pages.PagePool(num_pages=5, page_size=4, n_slots=2, slot_pages=4,
+                         double_free="ignore")
+    assert lax.try_reserve(1, 8)
+    lax.ensure(1, 8)
+    lax.free_slot(1)
+    free_before = len(lax._free)
+    lax.free_slot(1)                            # no-op by policy
+    assert len(lax._free) == free_before
+    assert lax.pages_in_use == 0
+
+
+def test_host_pager_double_free_raises():
+    pager = pages.HostPager(page_size=4, num_pages=None, max_len=16)
+    pager.reset(2)
+    assert pager.try_reserve(0, prompt_len=3, max_new=4)
+    pager.note_insert(0, 2)
+    pager.free(0)
+    with pytest.raises(ValueError, match="double free"):
+        pager.free(0)
+
+
+def test_page_size_one_pool_boundaries():
+    """ps=1 degenerate geometry: every token is its own page; worst-case
+    math, ensure and free must stay exact."""
+    pool = pages.PagePool(num_pages=9, page_size=1, n_slots=2, slot_pages=8)
+    assert pool.pages_for(5) == 5
+    assert pool.try_reserve(0, 8)               # exactly fills the pool
+    pool.ensure(0, 8)
+    assert pool.pages_in_use == 8
+    assert not pool.try_reserve(1, 1)           # full occupancy
+    pool.free_slot(0)
+    assert pool.try_reserve(1, 1)
+    pool.ensure(1, 1)
+    assert pool.pages_in_use == 1
+
+
+def test_prompt_exactly_filling_the_pool_is_admitted():
+    """A request whose worst case lands EXACTLY on pool capacity (and on
+    the slot's page-table length) is admitted and can grow to the last
+    token; one page more is refused."""
+    pager = pages.HostPager(page_size=4, num_pages=5, max_len=16)
+    pager.reset(n_slots=2)                      # capacity 4 == slot_pages
+    # prompt_len - 1 + max_new = 16 tokens = 4 pages = capacity
+    assert pager.can_ever_admit(prompt_len=9, max_new=8)
+    assert pager.try_reserve(0, prompt_len=9, max_new=8)
+    pager.note_insert(0, 8)
+    for _ in range(8):                          # decode to position 16
+        pager.pre_decode(np.asarray([True, False]))
+        pager.post_decode(np.asarray([True, False]))
+    assert pager.pool.pages_in_use == 4
+    assert not pager.try_reserve(1, prompt_len=2, max_new=1)
+    # 17 tokens needs 5 pages: impossible even in an idle pool
+    assert not pager.can_ever_admit(prompt_len=10, max_new=8)
+    pager.free(0)
+    assert pager.try_reserve(1, prompt_len=2, max_new=1)
+
+
+def test_can_ever_admit_agrees_with_idle_try_reserve():
+    """Contract under full occupancy: can_ever_admit(x) False implies
+    try_reserve(x) False in EVERY pool state, and True implies try_reserve
+    succeeds once the pool is idle again — the scheduler relies on exactly
+    this to decide reject-now vs wait-for-frees."""
+    pager = pages.HostPager(page_size=4, num_pages=7, max_len=16)
+    pager.reset(n_slots=3)
+    # occupy the pool fully: 16 tokens worst case across slot 0 + slot 1
+    assert pager.try_reserve(0, prompt_len=9, max_new=4)   # 3 pages
+    assert pager.try_reserve(1, prompt_len=9, max_new=4)   # 3 pages
+    cases = [(1, 1), (2, 3), (5, 4), (9, 8), (13, 4), (2, 16), (17, 1)]
+    for prompt_len, max_new in cases:
+        ever = pager.can_ever_admit(prompt_len, max_new)
+        now = pager.try_reserve(2, prompt_len, max_new)
+        if now:
+            pager.pool.free_slot(2)
+        assert ever or not now, (prompt_len, max_new)   # ¬ever ⇒ ¬now
+    pager.free(0)
+    pager.free(1)
+    for prompt_len, max_new in cases:
+        ever = pager.can_ever_admit(prompt_len, max_new)
+        now = pager.try_reserve(2, prompt_len, max_new)
+        if now:
+            pager.pool.free_slot(2)
+        assert ever == now, (prompt_len, max_new)       # idle: equivalent
 
 
 # ---------------------------------------------------- layout discovery

@@ -1,0 +1,266 @@
+"""Shared-prefix KV reuse (serve/pages.py, DESIGN.md §7): the ref-counted
+copy-on-write page pool with the radix block-hash prefix index.
+
+Pool-level: match/publish chains, refcount lifecycle, CoW rules (copy when
+shared, unpublish-in-place when sole owner), eviction of refcount-0 index
+pages under pressure.  Scheduler-level: prefix cache on vs off must be
+token-identical for lm (real reuse), gemma2 (mixed ring/paged — the no-op
+index fallback) and split-brain (real reuse incl. the whole-prompt CoW
+case), with cached tokens reported per request, boundary traffic exact
+under the cached-token accounting, and zero steady-state recompiles."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import pages, slots
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.splitbrain_engine import SplitBrainEngine, traffic_model_for
+
+
+# --------------------------------------------------------- pool-level radix
+def test_pool_match_publish_and_refcount_lifecycle():
+    pool = pages.PagePool(num_pages=9, page_size=4, n_slots=3, slot_pages=4)
+    prompt = np.arange(1, 11, dtype=np.int32)          # T0=10, body=9
+    assert pool.match_prefix(prompt) == []             # empty index
+    # slot 0 prefills the body privately, then publishes its full pages
+    assert pool.try_admit(0, 9 + 4)                    # body + max_new
+    pool.ensure(0, 9)
+    assert pool.publish(0, prompt, n_tokens=9) == 2    # 2 full pages of 4
+    assert pool.index_pages == 2 and pool.cached_pages == 0
+    owned = [int(pool.table[0, i]) for i in range(2)]
+    # a second identical prompt matches the whole chain; a diverging one
+    # stops at the first miss (radix walk)
+    assert pool.match_prefix(prompt) == owned
+    other = prompt.copy()
+    other[5] += 1                                      # diverge in page 1
+    assert pool.match_prefix(other) == owned[:1]
+    # slot 1 admits with the match: refcount++ but no new storage for them
+    assert pool.try_admit(1, 9 + 4, matched=owned)
+    assert all(pool.refcount[p] == 2 for p in owned)
+    assert pool.pages_in_use == int(pool._n_alloc[0])  # shared, counted once
+    # frees: refcount drops; published pages become evictable, private
+    # pages return to the free list
+    pool.free_slot(1)
+    assert all(pool.refcount[p] == 1 for p in owned)
+    pool.free_slot(0)
+    assert all(pool.refcount[p] == 0 for p in owned)
+    assert pool.cached_pages == 2                      # resident, matchable
+    assert pool.match_prefix(prompt) == owned          # still hits
+    # re-admitting pins them again (0 -> 1 refcount, leaves the LRU)
+    assert pool.try_admit(2, 9 + 4, matched=pool.match_prefix(prompt))
+    assert pool.cached_pages == 0 and pool.pages_in_use >= 2
+
+
+def test_pool_eviction_under_pressure_and_invariant():
+    """With the free list exhausted, draws evict the oldest-released
+    refcount-0 index page instead of failing; admission never overcommits
+    (pinned + outstanding reservations - drawn <= capacity)."""
+    pool = pages.PagePool(num_pages=5, page_size=4, n_slots=2, slot_pages=4)
+    prompt = np.arange(1, 14, dtype=np.int32)          # 3 full pages
+    assert pool.try_admit(0, 13)
+    pool.ensure(0, 13)
+    pool.publish(0, prompt, n_tokens=12)
+    pool.free_slot(0)
+    assert pool.cached_pages == 3 and len(pool._free) == 1
+    # capacity 4, 3 cached + 1 free: a 4-page private request must evict
+    assert pool.try_admit(1, 16)                       # 4 pages, no match
+    pool.ensure(1, 16)
+    assert pool.evictions >= 2                         # pressure hit the LRU
+    assert pool.pages_in_use == 4
+    assert pool.index_pages + pool.cached_pages < 3    # entries retired
+    pool.free_slot(1)
+    # evicted entries no longer match (chain broken at the evicted page)
+    assert len(pool.match_prefix(prompt)) < 3
+
+
+def test_pool_cow_copy_when_shared_unpublish_when_sole():
+    pool = pages.PagePool(num_pages=9, page_size=4, n_slots=3, slot_pages=4)
+    prompt = np.arange(1, 9, dtype=np.int32)           # exactly 2 pages
+    assert pool.try_admit(0, 8 + 2)
+    pool.ensure(0, 8)
+    pool.publish(0, prompt, n_tokens=8)
+    owned = [int(pool.table[0, i]) for i in range(2)]
+    # slot 1 maps the whole prompt (overshoot case: +1 CoW reservation)
+    assert pool.try_admit(1, 7 + 2, matched=owned, extra_new=1)
+    # shared page -> copy: new private dst, src refcount drops, table remaps
+    op = pool.cow_page(1, 1)
+    assert op is not None
+    src, dst = op
+    assert src == owned[1] and dst != src
+    assert pool.refcount[src] == 1 and pool.refcount[dst] == 1
+    assert int(pool.table[1, 1]) == dst
+    assert int(pool.table[0, 1]) == src                # owner untouched
+    assert pool.cow_copies == 1
+    # sole owner but published -> unpublish in place, NO copy
+    pool.free_slot(1)
+    before = pool.index_pages
+    assert pool.cow_page(0, 1) is None
+    assert pool.index_pages == before - 1              # entry retired
+    # private and unpublished -> nothing at all
+    assert pool.cow_page(0, 1) is None
+    assert pool.cow_copies == 1
+
+
+# ------------------------------------------------------- scheduler parity
+def _lm_engine(prefix, **kw):
+    cfg = get_config("stablelm-1.6b").reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, ServeEngine(cfg, params, max_len=64, page_size=8,
+                            num_pages=33, prefix_cache=prefix, **kw)
+
+
+def _shared_prefix_prompts(cfg, prefix_len=16, tails=(3, 5, 1, 7), seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+    ps = [np.concatenate([shared,
+                          rng.integers(1, cfg.vocab_size, (t,)
+                                       ).astype(np.int32)]) for t in tails]
+    ps.append(shared.copy())       # whole-prefix repeat: the CoW case
+    return ps
+
+
+def test_prefix_cache_on_off_token_identity_lm():
+    """lm (every K/V leaf pages): prefix cache ON must be token-identical
+    to OFF through the scheduler, report cached tokens per request, do
+    strictly less prefill work, and keep eq. 7-10 boundary bytes exact
+    under the cached-token accounting."""
+    cfg, eng_off = _lm_engine("off")
+    _, eng_on = _lm_engine("on")
+    prompts = _shared_prefix_prompts(cfg)
+    reqs = [Request(uid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+
+    def run(eng):
+        eng.meter.reset()
+        sched = ContinuousBatchingScheduler(eng, max_slots=3,
+                                            prefill_chunk=8)
+        return sched.run([dataclasses.replace(r) for r in reqs]), sched
+
+    off, _ = run(eng_off)
+    on, sched_on = run(eng_on)
+    for a, b in zip(off["results"], on["results"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.cached_tokens == 0
+    assert on["cached_prompt_tokens"] > 0
+    assert on["prefill_tokens"] < off["prefill_tokens"]
+    # the whole-prefix repeat (last uid) hits with its full body cached
+    assert on["results"][-1].cached_tokens == len(prompts[-1]) - 1
+    # eq. 7-10 exactness with the cache on: cached tokens never cross
+    n_tok = sum(len(p) - 1 + 6 for p in prompts)
+    bpt = traffic_model_for(cfg).bytes_per_token()
+    assert eng_off.measured_bytes()["total"] == n_tok * bpt
+    assert eng_on.measured_bytes()["total"] == \
+        (n_tok - on["cached_prompt_tokens"]) * bpt
+    stats = eng_on.cache_stats(sched_on.cache)
+    assert stats["prefix_hits"] > 0
+    assert stats["pages_allocated"] < \
+        eng_off.cache_stats(sched_on.cache)["pages_allocated"]
+    assert stats["cow_copies"] >= 1          # the whole-prefix repeat
+
+
+def test_prefix_cache_gemma2_mixed_ring_is_noop_but_identical():
+    """gemma2 alternates ring (window) and paged (global) layers: the ring
+    leaves are slot-private dense state a shared page cannot restore, so
+    the prefix index must NO-OP (zero cached tokens) while staying
+    token-identical with the knob on."""
+    cfg = get_config("gemma2-27b").reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _shared_prefix_prompts(cfg, prefix_len=16, tails=(3, 6))
+
+    def run(prefix):
+        eng = ServeEngine(cfg, params, max_len=32, page_size=8,
+                          num_pages=17, prefix_cache=prefix)
+        sched = ContinuousBatchingScheduler(eng, max_slots=2,
+                                            prefill_chunk=8)
+        return sched.run([Request(uid=i, prompt=p, max_new=4)
+                          for i, p in enumerate(prompts)]), eng
+
+    off, _ = run("off")
+    on, eng_on = run("on")
+    assert not eng_on.prefix_sharing_active()    # ring leaves demote it
+    assert on["cached_prompt_tokens"] == 0
+    for a, b in zip(off["results"], on["results"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert b.cached_tokens == 0
+
+
+def test_splitbrain_prefix_identity_with_cow():
+    """Split-brain engine (k/v always page): prefix cache vs the fused
+    one-request generate, including the whole-prompt CoW hit, and pages
+    drain back after the run (shared pages become cached, not leaked)."""
+    cfg = get_config("tinyllama-1.1b").reduced(vocab_size=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    ref = SplitBrainEngine(cfg, params, max_len=64, quantize=False)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, 120, (16,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, 120, (t,)).astype(np.int32)])
+               for t in (2, 5, 3)]
+    prompts.append(shared.copy())            # whole-prompt hit -> CoW
+    base = [ref.generate(p[None, :], max_new=5)["tokens"][0]
+            for p in prompts]
+
+    eng = SplitBrainEngine(cfg, params, max_len=64, quantize=False,
+                           page_size=8, num_pages=25, prefix_cache="on")
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, prefill_chunk=8)
+    res = sched.run([Request(uid=i, prompt=p, max_new=5)
+                     for i, p in enumerate(prompts)])
+    for i, r in enumerate(res["results"]):
+        np.testing.assert_array_equal(r.tokens, base[i])
+    assert res["cached_prompt_tokens"] > 0
+    assert res["results"][-1].cached_tokens == len(shared) - 1
+    stats = eng.cache_stats(sched.cache)
+    assert stats["pages_in_use"] == 0        # all slots freed
+    assert stats["cow_copies"] >= 1
+    assert stats["cached_index_pages"] > 0   # prefix stays matchable
+
+
+def test_prefix_cache_zero_steady_state_recompiles():
+    """After warmup (which exercises the seed gather AND the CoW copy), a
+    fresh shared-prefix workload compiles NOTHING — match lengths, page
+    assignments and copies are traced operands, not compile keys."""
+    cfg, eng = _lm_engine("on")
+    prompts = _shared_prefix_prompts(cfg)
+    sched = ContinuousBatchingScheduler(eng, max_slots=3, prefill_chunk=8)
+    sched.warmup()
+    reqs = [Request(uid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    sched.run([dataclasses.replace(r) for r in reqs])
+    counter = slots.CompileCounter.instance()
+    c0 = counter.count
+    out = sched.run([dataclasses.replace(r) for r in reqs])
+    assert out["cached_prompt_tokens"] > 0
+    if counter.available:
+        assert counter.count == c0, "prefix-cache steady state recompiled"
+
+
+def test_request_latency_metrics():
+    """queue_wait_s and ttft_s ship on every RequestResult and are
+    consistent: admission comes at/after arrival, the first token at/after
+    admission, finish at/after the first token."""
+    cfg, eng = _lm_engine("on")
+    prompts = _shared_prefix_prompts(cfg, tails=(3, 5))
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, prefill_chunk=8)
+    res = sched.run([Request(uid=i, prompt=p, max_new=4,
+                             arrival_s=0.01 * i)
+                     for i, p in enumerate(prompts)], realtime=True)
+    for i, r in enumerate(res["results"]):
+        assert r.queue_wait_s >= 0.0
+        assert r.ttft_s >= r.queue_wait_s
+        # finished_s is loop-relative; ttft_s is arrival-relative
+        assert r.finished_s >= r.ttft_s + 0.01 * i - 1e-9
+        assert r.gen_len == 4
+
+
+def test_prefix_cache_knob_validation():
+    with pytest.raises(ValueError):
+        _lm_engine("sometimes")

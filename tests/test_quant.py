@@ -1,5 +1,4 @@
 """Logic-aware quantization: error bounds, pruning, LAQ trade-off."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Split-Brain engine: measured interface traffic == analytical model, and
 the partitioned (device/host) execution matches the monolithic decode."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import ITAConfig
 from repro.core.splitbrain import TrafficModel
 from repro.models import api
 from repro.serve.splitbrain_engine import SplitBrainEngine, traffic_model_for

@@ -1,8 +1,6 @@
 """Substrate tests: optimizer, data determinism/elasticity, checkpoint
 atomicity + elastic restore, preemption, HLO analyzer."""
-import json
 import os
-import signal
 
 import jax
 import jax.numpy as jnp
