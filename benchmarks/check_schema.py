@@ -11,7 +11,7 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA = "serve_bench/v4"
+SCHEMA = "serve_bench/v5"
 
 # every per-arch result of the four slot-cache disciplines
 RESULT_KEYS = {
@@ -29,6 +29,16 @@ PREFIX_KEYS = {
 }
 # per-run latency percentiles (serve_bench/v4)
 RUN_KEYS = {"latency_s", "ttft_s", "queue_wait_s", "cached_prompt_tokens"}
+# the online-overload discipline (serve_bench/v5): unloaded vs 2x-overload
+# with SLA preemption, per-priority percentiles, cancel SLO probe
+OVERLOAD_KEYS = {
+    "config", "unloaded", "overload", "overload_no_preemption",
+    "high_prio_p95_ttft_ratio", "high_priority_frac", "preemptions",
+    "cancel_pages_freed_one_iteration", "steady_state_recompiles",
+    "traffic_exact",
+}
+OVERLOAD_RUN_KEYS = {"ttft_s_by_priority", "latency_s_by_priority",
+                     "preemptions", "by_state"}
 
 
 def check(path: str) -> None:
@@ -52,6 +62,18 @@ def check(path: str) -> None:
         assert not missing, f"{path}: prefix {r['config']} missing {missing}"
         assert r["prefix_overlap"] >= 0.5, (
             f"{path}: prefix discipline must run at >= 50% overlap")
+    assert report.get("overload_results"), f"{path}: no overload_results"
+    for r in report["overload_results"]:
+        missing = OVERLOAD_KEYS - r.keys()
+        assert not missing, (
+            f"{path}: overload {r['config']} missing {missing}")
+        for run in ("unloaded", "overload", "overload_no_preemption"):
+            miss = OVERLOAD_RUN_KEYS - r[run].keys()
+            assert not miss, f"{path}: {r['config']}.{run} missing {miss}"
+            for pct in r[run]["ttft_s_by_priority"].values():
+                assert {"p50", "p95"} <= pct.keys(), (path, run)
+        assert "1" in r["overload"]["ttft_s_by_priority"], (
+            f"{path}: overload run has no high-priority tier")
     print(f"{path}: ok ({SCHEMA})")
 
 

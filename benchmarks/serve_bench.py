@@ -31,6 +31,18 @@ gated because the cache also unthrottles admission and so legitimately
 raises concurrency), zero steady-state recompiles, and eq. 7-10 traffic
 exactness under the cached-token accounting.
 
+A sixth discipline measures the ONLINE serving semantics (DESIGN.md §8)
+under overload: a priority-split Poisson trace (~25% high-priority) is
+served unloaded (arrivals well under the measured service rate), then at
+2x overload with SLA-aware preemption on, and per-priority TTFT
+percentiles are compared.  Gates: high-priority p95 TTFT under 2x overload
+stays within 1.5x of its unloaded value (preemption evicts low-priority
+victims, publishing their full pages first so resume is near-free); a
+cancelled mid-decode request returns its pages within ONE scheduler
+iteration (asserted with a live probe); zero steady-state recompiles and
+meter-exact traffic with preemption ON (every token that crossed — prefill,
+decode, re-prefill after eviction — at exactly eq. 7-10 bytes).
+
 Measures tokens/s, requests/s (wall AND busy — arrival sleeps are reported
 separately so idle-heavy traces can't inflate apparent efficiency), mean
 per-request latency, the paged-memory claim (peak resident KV bytes of the
@@ -420,6 +432,163 @@ def bench_prefix(arch: str, n_requests: int, max_slots: int,
     }
 
 
+def _priority_workload(cfg, n_requests: int, max_new: int, mean_gap_s: float,
+                       high_frac: float = 0.25,
+                       seed: int = 0) -> List[Request]:
+    """The ragged Poisson trace with an SLA split: every 1/high_frac-th
+    request is priority 1 (interactive tier), the rest priority 0 (batch
+    tier) — the mix the overload discipline protects."""
+    reqs = _workload(cfg, n_requests, max_new, mean_gap_s, seed=seed)
+    period = max(int(round(1.0 / high_frac)), 1)
+    return [dataclasses.replace(r, priority=1 if i % period == 0 else 0)
+            for i, r in enumerate(reqs)]
+
+
+def _run_online(eng: ServeEngine, reqs: List[Request], max_slots: int,
+                prefill_chunk: Optional[int],
+                preemption: bool) -> Dict[str, Any]:
+    """One realtime pass with the online scheduler; returns per-priority
+    TTFT/latency percentiles plus the loop counters."""
+    sched = ContinuousBatchingScheduler(eng, max_slots=max_slots,
+                                        prefill_chunk=prefill_chunk,
+                                        preemption=preemption)
+    out = sched.run(list(reqs), realtime=True)
+    assert not out["rejected"], out["rejected"]
+    prio = {r.uid: r.priority for r in reqs}
+    ttft_by: Dict[int, List[float]] = {}
+    lat_by: Dict[int, List[float]] = {}
+    arrival = {r.uid: r.arrival_s for r in reqs}
+    for res in out["results"]:
+        ttft_by.setdefault(prio[res.uid], []).append(res.ttft_s)
+        lat_by.setdefault(prio[res.uid], []).append(
+            res.finished_s - arrival[res.uid])
+    return {"wall_s": out["wall_s"],
+            "busy_s": out["busy_s"],
+            "decoded_tokens": out["decoded_tokens"],
+            "prefill_tokens": out["prefill_tokens"],
+            "cached_prompt_tokens": out["cached_prompt_tokens"],
+            "preemptions": out["preemptions"],
+            "by_state": out["by_state"],
+            "tokens_per_s": out["tokens_per_s"],
+            "requests_per_s": out["requests_per_s"],
+            "ttft_s_by_priority": {str(p): _pctiles(v)
+                                   for p, v in sorted(ttft_by.items())},
+            "latency_s_by_priority": {str(p): _pctiles(v)
+                                      for p, v in sorted(lat_by.items())}}
+
+
+def _cancel_probe(eng: ServeEngine, cfg, prefill_chunk: int) -> bool:
+    """Live assertion of the cancellation SLO: drive a mid-decode request
+    through the open-loop api, cancel it, and check the pool occupancy is
+    back to baseline after ONE ``step()``."""
+    rng = np.random.default_rng(11)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2,
+                                        prefill_chunk=prefill_chunk)
+    sched.begin()
+    base = eng.cache_stats(sched.cache).get("pages_in_use", 0)
+    prompt = rng.integers(1, cfg.vocab_size, (12,)).astype(np.int32)
+    sched.submit(Request(uid=0, prompt=prompt, max_new=eng.max_len - 12))
+    for _ in range(16):
+        sched.step()
+        if sched.decoding_uids():
+            break
+    mid = eng.cache_stats(sched.cache).get("pages_in_use", 0)
+    sched.cancel(0)
+    fin = sched.step()           # ONE iteration
+    after = eng.cache_stats(sched.cache).get("pages_in_use", 0)
+    sched.poll()                 # flush the meter replay
+    return (len(fin) == 1 and fin[0].state == "CANCELLED"
+            and mid > base and after == base)
+
+
+def bench_overload(arch: str, n_requests: int, max_slots: int,
+                   overrides: Dict[str, Any], page_size: int = 8,
+                   prefill_chunk: int = 8, max_new: int = 16,
+                   high_frac: float = 0.25) -> Dict[str, Any]:
+    """The online-serving discipline: priority-split traffic unloaded vs at
+    2x overload with SLA-aware preemption, plus the cancellation probe.
+
+    Gates (via main()'s FAIL path): high-priority p95 TTFT under overload
+    <= 1.5x its unloaded value, cancelled pages returned within one
+    iteration, zero steady-state recompiles, meter-exact traffic with
+    preemption ON."""
+    cfg = get_config(arch).reduced(**overrides)
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = pages.round_len(16 - 1 + max_new, page_size, prefill_chunk)
+    slot_pages = max_len // page_size
+    # tight pool (half the dense capacity): overload pressure must be real
+    num_pages = max(max_slots * slot_pages // 2, slot_pages) + 1
+    eng = ServeEngine(cfg, params, max_len=max_len, page_size=page_size,
+                      num_pages=num_pages, prefix_cache="on")
+    bpt = traffic_model_for(cfg).bytes_per_token()
+
+    # calibrate the service rate with a saturated closed run (also the warm
+    # pass: compiles every steady-state program, including the preemption
+    # paths — publish, seed, re-prefill — via the prefix-armed warmup)
+    ContinuousBatchingScheduler(eng, max_slots=max_slots,
+                                prefill_chunk=prefill_chunk).warmup()
+    warm_reqs = _priority_workload(cfg, n_requests, max_new, 0.0,
+                                   high_frac, seed=1)
+    warm_reqs = [dataclasses.replace(r, uid=-1 - i, arrival_s=0.0)
+                 for i, r in enumerate(warm_reqs)]
+    warm = _run_online(eng, warm_reqs, max_slots, prefill_chunk,
+                       preemption=True)
+    svc = warm["busy_s"] / n_requests      # seconds of service per request
+
+    counter = slots.CompileCounter.instance()
+    c0 = counter.count
+
+    def run(mean_gap_s, preemption, seed):
+        reqs = _priority_workload(cfg, n_requests, max_new, mean_gap_s,
+                                  high_frac, seed=seed)
+        eng.meter.reset()
+        r = _run_online(eng, reqs, max_slots, prefill_chunk, preemption)
+        # meter exactness under eviction/resume: every token the loop
+        # counted as crossing — prefill, decode, re-prefill after eviction
+        # — was metered at exactly eq. 7-10 bytes, nothing more
+        measured = eng.measured_bytes()["total"]
+        analytic = (r["prefill_tokens"] + r["decoded_tokens"]) * bpt
+        r["traffic"] = {"measured": measured, "analytical": analytic,
+                        "exact": measured == analytic}
+        return r
+
+    unloaded = run(4.0 * svc, preemption=True, seed=2)
+    overload = run(0.5 * svc, preemption=True, seed=2)
+    baseline = run(0.5 * svc, preemption=False, seed=2)
+    recompiles = counter.count - c0
+    cancel_ok = _cancel_probe(eng, cfg, prefill_chunk)
+
+    hi = str(1)
+    ratio = (overload["ttft_s_by_priority"][hi]["p95"]
+             / max(unloaded["ttft_s_by_priority"][hi]["p95"], 1e-9))
+    return {
+        "config": cfg.name,
+        "n_requests": n_requests,
+        "max_slots": max_slots,
+        "max_len": max_len,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "prefill_chunk": prefill_chunk,
+        "max_new": max_new,
+        "high_priority_frac": high_frac,
+        "svc_s_per_request": svc,
+        "unloaded_gap_s": 4.0 * svc,
+        "overload_gap_s": 0.5 * svc,
+        "unloaded": unloaded,
+        "overload": overload,
+        "overload_no_preemption": baseline,
+        "high_prio_p95_ttft_ratio": ratio,
+        "preemptions": overload["preemptions"],
+        "cancel_pages_freed_one_iteration": cancel_ok,
+        "steady_state_recompiles": recompiles,
+        "traffic_exact": (unloaded["traffic"]["exact"]
+                          and overload["traffic"]["exact"]
+                          and baseline["traffic"]["exact"]),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -454,6 +623,15 @@ def main(argv=None) -> int:
         args.mean_gap_ms / 1e3, overrides, page_size=args.page_size,
         prefill_chunk=args.prefill_chunk,
         repeats=1 if args.quick else 3)]
+    # the online-overload discipline: priority-split traffic unloaded vs at
+    # 2x overload with SLA-aware preemption, plus the cancellation probe.
+    # FEW slots relative to the trace: at 2x the service rate the queue
+    # must actually build, or there is no pressure to preempt under
+    overload_results = [bench_overload(
+        "llama2-7b", max(n_requests // 2, 16),
+        max(args.slots // 4, 2), overrides, page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk,
+        max_new=max(max_new // 2, 8))]
 
     # rwkv keeps dense recurrent state (no-op page table): the memory gate
     # only applies where the pool actually pages KV
@@ -474,6 +652,11 @@ def main(argv=None) -> int:
     # relaxes the timing one (sub-second walls are noise-dominated)
     prefix_gate = 1.0 if args.quick else 1.3
     prefix_pages_gate = 1.0 if args.quick else 1.5
+    # overload gate: high-priority p95 TTFT at 2x overload within 1.5x of
+    # unloaded (the SLA preemption is FOR this); quick mode's sub-second
+    # TTFTs are scheduler-noise-dominated, so it gets headroom while the
+    # structural gates (cancel SLO, recompiles, traffic) stay strict
+    overload_gate = 4.0 if args.quick else 1.5
     summary = {
         r["config"]: {
             "requests_per_s_speedup": round(r["requests_per_s_speedup"], 2),
@@ -494,6 +677,18 @@ def main(argv=None) -> int:
             "traffic_exact": r["traffic_exact"],
         } for r in results
     }
+    summary["overload"] = {
+        r["config"]: {
+            "high_prio_p95_ttft_ratio": round(r["high_prio_p95_ttft_ratio"],
+                                              2),
+            "preemptions": r["preemptions"],
+            "cancel_pages_freed_one_iteration":
+                r["cancel_pages_freed_one_iteration"],
+            "zero_steady_state_recompiles":
+                r["steady_state_recompiles"] == 0,
+            "traffic_exact": r["traffic_exact"],
+        } for r in overload_results
+    }
     summary["prefix"] = {
         r["config"]: {
             "prefix_overlap": round(r["prefix_overlap"], 2),
@@ -512,7 +707,7 @@ def main(argv=None) -> int:
         } for r in prefix_results
     }
     report = {
-        "schema": "serve_bench/v4",
+        "schema": "serve_bench/v5",
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "quick": args.quick,
@@ -523,8 +718,10 @@ def main(argv=None) -> int:
         "gate_paged_transient_bytes": 0,
         "gate_prefix_prefill_uplift": prefix_gate,
         "gate_prefix_pages_reduction": prefix_pages_gate,
+        "gate_overload_ttft_ratio": overload_gate,
         "results": results,
         "prefix_results": prefix_results,
+        "overload_results": overload_results,
         "summary": summary,
     }
     with open(args.out, "w") as f:
@@ -551,22 +748,32 @@ def main(argv=None) -> int:
                 and r["prefill_tokens_per_s_uplift"] >= prefix_gate
                 and r["kv_pages_stored_reduction"] >= prefix_pages_gate)
 
+    def overload_ok(r):
+        return (r["high_prio_p95_ttft_ratio"] <= overload_gate
+                and r["preemptions"] > 0
+                and r["cancel_pages_freed_one_iteration"]
+                and r["steady_state_recompiles"] == 0
+                and r["traffic_exact"])
+
     ok = all(r["requests_per_s_speedup"] >= gate
              and r["steady_state_recompiles"] == 0
              and r["paged_steady_state_recompiles"] == 0
              and r["gather_steady_state_recompiles"] == 0
              and r["traffic_exact"]
              and paged_ok(r) for r in results) \
-        and all(prefix_ok(r) for r in prefix_results)
+        and all(prefix_ok(r) for r in prefix_results) \
+        and all(overload_ok(r) for r in overload_results)
     if not ok:
         print(f"FAIL: continuous < {gate}x sequential requests/s, paged < "
               f"{mem_gate}x memory saving, paged < {rps_gate}x dense "
               f"requests/s, paged in-place < {inplace_gate}x gather "
               "tokens/s, nonzero dense-view transient, in-place KV reads "
-              ">= gather, steady-state recompile, traffic mismatch, or a "
+              ">= gather, steady-state recompile, traffic mismatch, a "
               f"prefix-cache gate (token identity, < {prefix_gate}x "
               f"prefill tokens/s, < {prefix_pages_gate}x page reduction, "
-              "no hits)",
+              f"no hits), or an overload gate (high-prio p95 TTFT > "
+              f"{overload_gate}x unloaded, no preemptions, cancelled pages "
+              "not freed in one iteration)",
               file=sys.stderr)
     return 0 if ok else 1
 

@@ -16,6 +16,11 @@
   # earlier requests skip re-prefilling them (ref-counted CoW pages)
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --page-size 8 --prefill-chunk 8 --prefix-cache on
+
+  # online semantics: SLA classes, deadlines, SLA-aware preemption
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --page-size 8 --priority 0,0,0,1 --deadline-s 5 \
+      --preemption on
 """
 from __future__ import annotations
 
@@ -69,6 +74,20 @@ def main(argv=None):
                          "(refcounted, copy-on-write) instead of "
                          "re-prefilling them; requires --page-size, "
                          "no-ops for families with recurrent/ring state")
+    ap.add_argument("--priority", default=None,
+                    help="comma-separated SLA classes cycled over the "
+                         "request stream (higher wins admission and may "
+                         "preempt lower), e.g. '0,0,0,1'")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds from serve-loop "
+                         "start; a request not finished by then terminates "
+                         "as TIMEOUT (slot and pages freed)")
+    ap.add_argument("--preemption", choices=("on", "off"), default="off",
+                    help="SLA-aware preemption: when a higher-priority "
+                         "request cannot be admitted, evict a lower-"
+                         "priority victim (publishing its full pages to "
+                         "the prefix cache first) and re-queue it with "
+                         "bounded exponential backoff")
     args = ap.parse_args(argv)
     if args.num_pages is not None and args.page_size is None:
         ap.error("--num-pages requires --page-size (the paged KV cache)")
@@ -80,6 +99,20 @@ def main(argv=None):
                                 or args.prefill_chunk is not None):
         ap.error("--page-size/--num-pages/--prefill-chunk only apply to "
                  "the --continuous serve loop")
+    if not args.continuous and (args.priority is not None
+                                or args.deadline_s is not None
+                                or args.preemption == "on"):
+        ap.error("--priority/--deadline-s/--preemption only apply to the "
+                 "--continuous serve loop")
+    priorities = [0]
+    if args.priority is not None:
+        try:
+            priorities = [int(p) for p in args.priority.split(",") if p != ""]
+        except ValueError:
+            ap.error(f"--priority must be comma-separated integers, "
+                     f"got {args.priority!r}")
+        if not priorities:
+            ap.error("--priority must name at least one SLA class")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -103,11 +136,14 @@ def main(argv=None):
                             1, cfg.vocab_size,
                             (int(rng.integers(lo, args.prompt_len + 1)),)
                         ).astype(np.int32),
-                        max_new=args.max_new)
+                        max_new=args.max_new,
+                        priority=priorities[i % len(priorities)],
+                        deadline_s=args.deadline_s)
                 for i in range(args.requests)]
-        sched = ContinuousBatchingScheduler(eng, max_slots=args.slots,
-                                            eos_id=args.eos_id,
-                                            prefill_chunk=args.prefill_chunk)
+        sched = ContinuousBatchingScheduler(
+            eng, max_slots=args.slots, eos_id=args.eos_id,
+            prefill_chunk=args.prefill_chunk,
+            preemption=args.preemption == "on")
         out = sched.run(reqs)
         report = {
             "arch": cfg.name,
@@ -120,6 +156,8 @@ def main(argv=None):
             "gen_len": [r.gen_len for r in out["results"]],
             "cached_prompt_tokens": out["cached_prompt_tokens"],
             "rejected": [(r.uid, r.reason) for r in out["rejected"]],
+            "by_state": out["by_state"],
+            "preemptions": out["preemptions"],
         }
         if args.page_size:
             report["cache"] = eng.cache_stats(sched.cache)

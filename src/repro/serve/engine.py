@@ -55,6 +55,7 @@ from repro.core.splitbrain import TrafficMeter, TrafficModel
 from repro.launch.mesh import make_test_mesh
 from repro.models import api
 from repro.serve import pages as pages_mod
+from repro.serve.errors import InvalidRequestError
 from repro.serve import slots as slots_mod
 from repro.train import step as step_mod
 
@@ -298,8 +299,11 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         :class:`~repro.serve.pages.PagePool` tracks the per-slot page
         tables; everything else keeps the dense ``(n_slots, ...)`` layout.
         """
-        assert not self.cfg.frontend_tokens and not self.cfg.cross_attn_every, \
-            "continuous batching covers the text-only families"
+        if self.cfg.frontend_tokens or self.cfg.cross_attn_every:
+            raise ValueError(
+                "continuous batching covers the text-only families "
+                "(frontend_tokens / cross-attention configs are not "
+                "slot-servable)")
         shape = jax.eval_shape(
             lambda: api.init_cache(self.cfg, n_slots, self.max_len))
         self._note_slot_cache(n_slots, shape, self._slot_axes(),
@@ -345,7 +349,10 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         """
         prompt = np.asarray(prompt, np.int32)
         T0 = prompt.shape[0]
-        assert T0 >= 1
+        if T0 < 1:
+            raise InvalidRequestError(
+                "prefill_slot needs a non-empty prompt (the last token "
+                "seeds decoding)")
         with self.mesh:
             cache = api.init_cache(self.cfg, 1, self.max_len)
             if T0 > 1:

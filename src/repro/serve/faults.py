@@ -1,0 +1,159 @@
+"""Deterministic fault injection for the online serving runtime.
+
+Graceful degradation is a tested property, not a hope: a seeded
+:class:`FaultInjector` plugs into ``ContinuousBatchingScheduler`` (the
+``faults=`` knob) and perturbs the loop at four injection points, all
+driven by one ``numpy`` PRNG so a (plan, seed) pair replays the exact same
+fault sequence every run — the chaos-smoke CI job sweeps a small seed
+matrix over the same suite:
+
+  admission     — the next N admissions (or a Bernoulli rate) spuriously
+                  report pool pressure: the scheduler must wait/preempt/
+                  retry, never crash or wrongly reject.
+  pool_squeeze  — a window of scheduler iterations during which EVERY
+                  admission reports exhaustion (the pool "filled up"),
+                  exercising queue growth and deadline timeouts under
+                  sustained pressure.
+  prefill       — a chunked-prefill job raises ``InjectedFault`` mid-chunk
+                  (probabilistic or targeted by uid): the scheduler must
+                  release the slot, reserved pages and radix refcounts and
+                  degrade the one request to REJECTED; or a job STALLS for
+                  k iterations (its chunks stop arriving), exercising the
+                  deadline machinery against a wedged prefill.
+  cancel_burst  — at a chosen iteration, a seeded fraction of the
+                  requests currently DECODING are cancelled at once
+                  (mid-decode cancellation burst); their pages must return
+                  within one scheduler iteration.
+
+Every fired event is recorded in ``events`` (name, uid/iteration) so tests
+can assert the fault actually happened — a chaos test that silently
+injected nothing proves nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.errors import InjectedFault
+
+__all__ = ["FaultPlan", "FaultInjector"]
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """What to inject; all points default off so a plan enables only the
+    failure modes a test targets."""
+    # admission: first-N hard failures plus an ongoing Bernoulli rate
+    admission_failures: int = 0
+    admission_fail_rate: float = 0.0
+    # pool exhaustion: every admission fails in [at, at + iters)
+    pool_squeeze_at: Optional[int] = None
+    pool_squeeze_iters: int = 0
+    # prefill faults: raise InjectedFault for these uids / at this rate
+    prefill_error_uids: Tuple[int, ...] = ()
+    prefill_error_rate: float = 0.0
+    # stalled prefill: with stall_rate, a job freezes for stall_iters
+    stall_rate: float = 0.0
+    stall_iters: int = 0
+    stall_uids: Tuple[int, ...] = ()
+    # mid-decode cancellation burst at one iteration
+    cancel_burst_at: Optional[int] = None
+    cancel_burst_frac: float = 0.5
+
+
+class FaultInjector:
+    """Seeded, replayable fault source consulted by the scheduler.
+
+    The scheduler calls :meth:`on_step` once per loop iteration (bursts,
+    window bookkeeping), :meth:`admission_fault` immediately before real
+    admission (True = pretend the pool refused), :meth:`prefill_fault`
+    before executing a chunk (may raise :class:`InjectedFault`), and
+    :meth:`prefill_stalled` to decide whether a job's chunk is withheld
+    this iteration.  All randomness comes from one ``default_rng(seed)``.
+    """
+
+    def __init__(self, plan: FaultPlan, seed: int = 0):
+        self.plan = plan
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(seed)
+        self.iteration = 0
+        self.events: List[Tuple] = []
+        self._admission_budget = int(plan.admission_failures)
+        self._stalls: Dict[int, int] = {}      # uid -> iterations remaining
+        self._stall_decided: Dict[int, bool] = {}
+        self._burst_fired = False
+
+    # ------------------------------------------------------------ loop hooks
+    def on_step(self, sched) -> None:
+        """Called at the top of every scheduler iteration."""
+        p = self.plan
+        if (p.cancel_burst_at is not None and not self._burst_fired
+                and self.iteration >= p.cancel_burst_at):
+            self._burst_fired = True
+            uids = sched.decoding_uids()
+            if uids:
+                n = max(1, int(round(len(uids) * p.cancel_burst_frac)))
+                picked = self.rng.choice(len(uids), size=min(n, len(uids)),
+                                         replace=False)
+                for i in sorted(int(j) for j in picked):
+                    self.events.append(("cancel_burst", uids[i],
+                                        self.iteration))
+                    sched.cancel(uids[i])
+        for uid in list(self._stalls):
+            self._stalls[uid] -= 1
+            if self._stalls[uid] <= 0:
+                del self._stalls[uid]
+        self.iteration += 1
+
+    def _squeezed(self) -> bool:
+        p = self.plan
+        return (p.pool_squeeze_at is not None
+                and p.pool_squeeze_at <= self.iteration
+                < p.pool_squeeze_at + p.pool_squeeze_iters)
+
+    def admission_fault(self, uid: int) -> bool:
+        """True: report pool pressure for this admission attempt (no real
+        resources are taken; the scheduler waits or preempts)."""
+        if self._squeezed():
+            self.events.append(("pool_squeeze", uid, self.iteration))
+            return True
+        if self._admission_budget > 0:
+            self._admission_budget -= 1
+            self.events.append(("admission_fault", uid, self.iteration))
+            return True
+        if (self.plan.admission_fail_rate > 0.0
+                and self.rng.random() < self.plan.admission_fail_rate):
+            self.events.append(("admission_fault", uid, self.iteration))
+            return True
+        return False
+
+    # -------------------------------------------------------- prefill hooks
+    def prefill_fault(self, uid: int) -> None:
+        """Raise ``InjectedFault`` when this job is scheduled to fail."""
+        p = self.plan
+        hit = uid in p.prefill_error_uids or (
+            p.prefill_error_rate > 0.0
+            and self.rng.random() < p.prefill_error_rate)
+        if hit:
+            self.events.append(("prefill_fault", uid, self.iteration))
+            raise InjectedFault(
+                f"injected prefill failure for request uid={uid} "
+                f"(seed={self.seed}, iteration={self.iteration})")
+
+    def prefill_stalled(self, uid: int) -> bool:
+        """True while this job's chunks are withheld (a wedged prefill)."""
+        p = self.plan
+        if uid not in self._stall_decided:
+            stall = uid in p.stall_uids or (
+                p.stall_rate > 0.0 and self.rng.random() < p.stall_rate)
+            self._stall_decided[uid] = stall
+            if stall and p.stall_iters > 0:
+                self._stalls[uid] = int(p.stall_iters)
+                self.events.append(("stall", uid, self.iteration))
+        return uid in self._stalls
+
+    def fired(self, kind: str) -> int:
+        """How many events of ``kind`` actually fired (tests assert > 0)."""
+        return sum(1 for e in self.events if e[0] == kind)

@@ -83,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import SCRATCH_PAGE, page_offsets
+from repro.serve.errors import PageLifecycleError, ReservationError
 
 __all__ = [
     "PagePool",
@@ -282,7 +283,7 @@ class PagePool:
         additional headroom (the CoW copy target when the match covers the
         decode append position)."""
         if self._live[slot]:
-            raise ValueError(
+            raise PageLifecycleError(
                 f"slot {slot} already reserved — reserve/admit must be "
                 f"paired with free_slot")
         need_total = self.pages_for(n_tokens)
@@ -330,10 +331,11 @@ class PagePool:
         """Allocate private pages so the slot can hold ``n_tokens``."""
         need = self.pages_for(n_tokens)
         while self._n_alloc[slot] < need:
-            assert self._drawn[slot] < self._reserved[slot], \
-                (f"slot {slot} drew {self._drawn[slot]} of "
-                 f"{self._reserved[slot]} reserved pages but needs more — "
-                 f"reservation bug")
+            if self._drawn[slot] >= self._reserved[slot]:
+                raise ReservationError(
+                    f"slot {slot} drew {self._drawn[slot]} of "
+                    f"{self._reserved[slot]} reserved pages but needs more "
+                    f"— reservation bug")
             page = self._take_page()  # cannot fail: admission invariant
             self.refcount[page] = 1
             self.table[slot, self._n_alloc[slot]] = page
@@ -356,9 +358,10 @@ class PagePool:
         """
         src = int(self.table[slot, logical])
         if self.refcount[src] > 1:
-            assert self._drawn[slot] < self._reserved[slot], \
-                (f"slot {slot} has no reserved page left for the CoW copy "
-                 f"of logical page {logical} — admission bug")
+            if self._drawn[slot] >= self._reserved[slot]:
+                raise ReservationError(
+                    f"slot {slot} has no reserved page left for the CoW "
+                    f"copy of logical page {logical} — admission bug")
             dst = self._take_page()
             self.refcount[dst] = 1
             self.refcount[src] -= 1
@@ -384,7 +387,7 @@ class PagePool:
         if not self._live[slot]:
             if self.double_free == "ignore":
                 return
-            raise ValueError(
+            raise PageLifecycleError(
                 f"double free: slot {slot} is not reserved (free_slot "
                 f"without a matching try_reserve/try_admit)")
         for i in range(int(self._n_alloc[slot])):

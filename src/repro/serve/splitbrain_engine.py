@@ -64,9 +64,12 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                  use_pallas: bool = False, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  paged_attn: str = "inplace", prefix_cache: str = "off"):
-        assert cfg.family == "lm" and len(cfg.layer_pattern) == 1, \
-            "split-brain reference engine covers the paper's LM configs"
-        assert not cfg.moe, "split-brain reference engine covers dense FFNs"
+        if cfg.family != "lm" or len(cfg.layer_pattern) != 1:
+            raise ValueError(
+                "split-brain reference engine covers the paper's LM configs")
+        if cfg.moe:
+            raise ValueError(
+                "split-brain reference engine covers dense FFNs")
         self.cfg = cfg
         self.meter = TrafficMeter()
         # The "synthesis" step: weights become immutable INT4 codes.

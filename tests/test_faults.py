@@ -1,0 +1,211 @@
+"""Fault-injection suite: graceful degradation as a tested property.
+
+Every injection point of serve/faults.py is driven against the real
+scheduler + paged engine and the loop must absorb it: injected prefill
+failures release the slot, reserved pages and radix refcounts (pool
+occupancy returns to baseline — the strand-pages regression); injected
+admission refusals delay but never wrongly reject; a pool-squeeze window
+only queues work; a mid-decode cancellation burst frees pages within one
+iteration and leaves the surviving streams token-identical; a stalled
+prefill is reaped by its deadline.  The CI chaos-smoke job sweeps this
+file over a fixed seed matrix via CHAOS_SEED, so determinism is part of
+the contract: same (plan, seed) -> same fault sequence."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import ServeEngine
+from repro.serve.errors import InjectedFault, SchedulerError
+from repro.serve.faults import FaultInjector, FaultPlan
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=32, page_size=4, num_pages=33,
+                      prefix_cache="on")
+    rng = np.random.default_rng(CHAOS_SEED)
+    prompts = [rng.integers(1, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in (5, 9, 4, 7)]
+    base = [np.asarray(eng.generate(p[None, :], max_new=MAX_NEW)
+                       ["tokens"][0]) for p in prompts]
+    return cfg, eng, prompts, base
+
+
+def _pool_baseline(eng):
+    pool = eng._pager.pool
+    return (pool.pages_in_use, pool.total_reserved, pool.total_drawn)
+
+
+def _drain(sched, limit=500):
+    for _ in range(limit):
+        sched.step()
+        if not sched.has_work():
+            return
+    raise AssertionError("scheduler did not drain")
+
+
+def test_injected_prefill_failure_releases_everything(setup):
+    """THE strand-pages regression (satellite): a prefill job that throws
+    mid-chunk must release its slot, reserved pages and radix-admission
+    refcounts — pool occupancy returns to baseline — while every other
+    request is served token-identically."""
+    cfg, eng, prompts, base = setup
+    inj = FaultInjector(FaultPlan(prefill_error_uids=(1,)), seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, prefill_chunk=4,
+                                        faults=inj)
+    sched.begin()
+    baseline = _pool_baseline(eng)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    _drain(sched)
+    assert inj.fired("prefill_fault") == 1
+    rej = sched.poll_rejected()
+    assert [r.uid for r in rej] == [1] and "injected" in rej[0].reason
+    res = {r.uid: r for r in sched.poll()}
+    for i in (0, 2, 3):
+        np.testing.assert_array_equal(res[i].tokens, base[i])
+        assert res[i].state == "DONE"
+    assert _pool_baseline(eng) == baseline, "stranded pages after fault"
+
+
+def test_prefill_exception_is_recoverable_not_fatal(setup):
+    """The typed-exception satellite end to end: InjectedFault is a
+    SchedulerError, the loop survives it, and an UNKNOWN exception type
+    still propagates (after cleanup) instead of being swallowed."""
+    cfg, eng, prompts, base = setup
+    assert issubclass(InjectedFault, SchedulerError)
+
+    class Hostile:
+        def __init__(self):
+            self.plan = FaultPlan()
+
+        def on_step(self, sched):
+            pass
+
+        def admission_fault(self, uid):
+            return False
+
+        def prefill_fault(self, uid):
+            if uid == 0:
+                raise RuntimeError("not a SchedulerError")
+
+        def prefill_stalled(self, uid):
+            return False
+
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, prefill_chunk=4,
+                                        faults=Hostile())
+    sched.begin()
+    baseline = _pool_baseline(eng)
+    sched.submit(Request(uid=0, prompt=prompts[1], max_new=MAX_NEW))
+    with pytest.raises(RuntimeError, match="not a SchedulerError"):
+        _drain(sched)
+    # the cleanup still ran: nothing stranded even on the fatal path
+    assert _pool_baseline(eng) == baseline
+
+
+def test_admission_faults_delay_but_never_reject(setup):
+    """Injected admission refusals look like transient pool pressure: the
+    scheduler must keep waiting (never eat the request via the idle-reject
+    backstop) and serve everything once the fault budget is spent."""
+    cfg, eng, prompts, base = setup
+    inj = FaultInjector(FaultPlan(admission_failures=3), seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    _drain(sched)
+    assert inj.fired("admission_fault") == 3
+    assert not sched.poll_rejected()
+    res = {r.uid: r for r in sched.poll()}
+    assert len(res) == len(prompts)
+    for i, b in enumerate(base):
+        np.testing.assert_array_equal(res[i].tokens, b)
+
+
+def test_pool_squeeze_window_queues_then_recovers(setup):
+    """A sustained exhaustion window: every admission fails during the
+    squeeze, the queue builds, and service resumes cleanly after."""
+    cfg, eng, prompts, base = setup
+    inj = FaultInjector(FaultPlan(pool_squeeze_at=1, pool_squeeze_iters=10),
+                        seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    _drain(sched)
+    assert inj.fired("pool_squeeze") > 0
+    assert not sched.poll_rejected()
+    res = {r.uid: r for r in sched.poll()}
+    for i, b in enumerate(base):
+        np.testing.assert_array_equal(res[i].tokens, b)
+        assert res[i].state == "DONE"
+
+
+def test_cancel_burst_frees_pages_within_one_iteration(setup):
+    """A seeded mid-decode cancellation burst: the victims terminate
+    CANCELLED in the burst iteration itself (pages back in the pool), and
+    the surviving streams stay token-identical."""
+    cfg, eng, prompts, base = setup
+    inj = FaultInjector(FaultPlan(cancel_burst_at=6, cancel_burst_frac=0.5),
+                        seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=4, faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=16))
+    pool = eng._pager.pool
+    cancelled_now = []
+    for _ in range(500):
+        before = pool.pages_in_use
+        fin = sched.step()
+        hit = [r for r in fin if r.state == "CANCELLED"]
+        if hit:
+            cancelled_now = hit
+            # the burst fired THIS iteration and the pages came back in it
+            assert pool.pages_in_use < before
+            break
+        if not sched.has_work():
+            break
+    assert inj.fired("cancel_burst") == len(cancelled_now) > 0
+    _drain(sched)
+    res = {r.uid: r for r in sched.poll()}
+    burst_uids = {r.uid for r in cancelled_now}
+    for i, b in enumerate(base):
+        if i not in burst_uids:
+            np.testing.assert_array_equal(res[i].tokens[:len(b)], b)
+    assert _pool_baseline(eng) == (0, 0, 0)
+
+
+def test_stalled_prefill_reaped_by_deadline(setup):
+    """A wedged prefill job (chunks withheld indefinitely) cannot hold its
+    slot forever: the request's deadline reaps it as TIMEOUT and the pool
+    returns to baseline."""
+    cfg, eng, prompts, base = setup
+    inj = FaultInjector(FaultPlan(stall_uids=(0,), stall_iters=10 ** 9),
+                        seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, prefill_chunk=4,
+                                        faults=inj)
+    sched.begin()
+    baseline = _pool_baseline(eng)
+    sched.submit(Request(uid=0, prompt=prompts[1], max_new=MAX_NEW,
+                         deadline_s=0.25))
+    sched.submit(Request(uid=1, prompt=prompts[2], max_new=MAX_NEW))
+    _drain(sched, limit=2_000_000)
+    assert inj.fired("stall") == 1
+    res = {r.uid: r for r in sched.poll()}
+    assert res[0].state == "TIMEOUT" and res[0].gen_len == 0
+    assert res[1].state == "DONE"
+    np.testing.assert_array_equal(res[1].tokens, base[2])
+    assert _pool_baseline(eng) == baseline

@@ -1,0 +1,163 @@
+"""Cancellation and SLA-aware preemption across the model families.
+
+The open-loop lifecycle (DESIGN.md §8) must be output-invariant: requests
+that are NOT preempted decode token-identically whether preemption is armed
+or not, and a preempted-then-resumed victim — evicted mid-decode, its pages
+freed, re-admitted later with prompt+generated as its effective prompt —
+must match its uninterrupted fused output exactly under greedy decode.
+Covered per family because eviction stresses family-specific slot state:
+lm (dense KV), gemma2 (sliding-window ring buffers), hymba (mixed
+mamba/attn), rwkv (pure recurrent state, nothing pages), and the
+split-brain paged engine where resume should be near-free via the radix
+prefix cache (published at eviction)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.splitbrain_engine import SplitBrainEngine
+
+MAX_NEW = 6
+FAMILIES = ["stablelm-1.6b", "gemma2-27b", "hymba-1.5b", "rwkv6-7b",
+            "splitbrain"]
+
+
+def _build(arch):
+    """Returns (cfg, engine, prefill_chunk).  The split-brain build is
+    paged + prefix-armed with 4-token pages (a briefly-decoding victim has
+    a COMPLETED full page to publish at eviction) and chunked prefill (a
+    partial prefix match computes only the unmatched tail, which needs the
+    chunk path — without it admission correctly degrades to a full
+    re-prefill and the resume would show cached_tokens == 0)."""
+    name = "tinyllama-1.1b" if arch == "splitbrain" else arch
+    cfg = get_config(name).reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    if arch == "splitbrain":
+        eng = SplitBrainEngine(cfg, params, max_len=32, quantize=False,
+                               page_size=4, num_pages=17, prefix_cache="on")
+        return cfg, eng, 4
+    return cfg, ServeEngine(cfg, params, max_len=32), None
+
+
+def _fused(eng, prompt, max_new=MAX_NEW):
+    return np.asarray(eng.generate(prompt[None, :], max_new=max_new)
+                      ["tokens"][0])
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, (t,)).astype(np.int32)
+            for t in lens]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_preempted_and_resumed_matches_uninterrupted(arch):
+    """Force an eviction with the open-loop api: one slot, a low-priority
+    victim mid-decode, then a high-priority arrival.  The victim's resumed
+    output must equal its uninterrupted fused output, and the preemptor
+    must be untouched by having preempted."""
+    cfg, eng, chunk = _build(arch)
+    p0, p1 = _prompts(cfg, (5, 6))
+    base0, base1 = _fused(eng, p0), _fused(eng, p1)
+
+    sched = ContinuousBatchingScheduler(eng, max_slots=1, preemption=True,
+                                        backoff_steps=1,
+                                        prefill_chunk=chunk)
+    sched.begin()
+    sched.submit(Request(uid=0, prompt=p0, max_new=MAX_NEW, priority=0))
+    for _ in range(3):
+        sched.step()
+    assert sched.decoding_uids() == [0]      # victim is mid-decode
+    sched.submit(Request(uid=1, prompt=p1, max_new=MAX_NEW, priority=5))
+    for _ in range(200):
+        sched.step()
+        if not sched.has_work():
+            break
+    res = {r.uid: r for r in sched.poll()}
+    assert not sched.poll_rejected()
+    assert res[0].preemptions >= 1 and res[0].state == "DONE"
+    assert res[1].preemptions == 0 and res[1].state == "DONE"
+    np.testing.assert_array_equal(res[0].tokens, base0)
+    np.testing.assert_array_equal(res[1].tokens, base1)
+    if arch == "splitbrain":
+        # eviction published the victim's full pages: the resume admission
+        # radix-matched them instead of re-prefilling from scratch
+        assert res[0].cached_tokens > 0
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_non_preempted_identical_with_preemption_on_vs_off(arch):
+    """Same closed workload served with preemption armed and disarmed:
+    when nothing triggers an eviction the flag must be a pure no-op, and
+    with mixed priorities the non-preempted requests must still be
+    token-identical to their fused baselines."""
+    cfg, eng, chunk = _build(arch)
+    prompts = _prompts(cfg, (4, 6, 3, 5), seed=1)
+    base = [_fused(eng, p) for p in prompts]
+
+    def serve(preemption):
+        sched = ContinuousBatchingScheduler(eng, max_slots=2,
+                                            preemption=preemption,
+                                            prefill_chunk=chunk)
+        reqs = [Request(uid=i, prompt=p, max_new=MAX_NEW,
+                        priority=i % 2)
+                for i, p in enumerate(prompts)]
+        out = sched.run(reqs)
+        assert not out["rejected"]
+        return out
+
+    off = serve(False)
+    on = serve(True)
+    for r_off, r_on, b in zip(off["results"], on["results"], base):
+        np.testing.assert_array_equal(r_off.tokens, b)
+        np.testing.assert_array_equal(r_on.tokens, b)
+        assert r_on.state == "DONE" and r_off.state == "DONE"
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_mid_decode_cancellation_leaves_others_token_identical(arch):
+    """Cancel one stream mid-decode: it terminates CANCELLED within one
+    iteration with a greedy-consistent partial output, the other streams
+    finish token-identical to their fused baselines, and (paged engines)
+    its pages are back in the pool the same iteration."""
+    cfg, eng, chunk = _build(arch)
+    prompts = _prompts(cfg, (5, 4, 6), seed=2)
+    base = [_fused(eng, p) for p in prompts]
+
+    sched = ContinuousBatchingScheduler(eng, max_slots=3,
+                                        prefill_chunk=chunk)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    for _ in range(20):
+        sched.step()
+        if 1 in sched.decoding_uids():
+            break
+    assert 1 in sched.decoding_uids()
+    stats_mid = eng.cache_stats(sched.cache)
+    sched.cancel(1)
+    fin = sched.step()                      # ONE iteration
+    cancelled = [r for r in fin if r.uid == 1]
+    assert len(cancelled) == 1 and cancelled[0].state == "CANCELLED"
+    if "pages_in_use" in stats_mid:
+        assert (eng.cache_stats(sched.cache)["pages_in_use"]
+                < stats_mid["pages_in_use"])
+    for _ in range(200):
+        sched.step()
+        if not sched.has_work():
+            break
+    res = {r.uid: r for r in sched.poll()}
+    res[1] = cancelled[0]
+    np.testing.assert_array_equal(res[0].tokens, base[0])
+    np.testing.assert_array_equal(res[2].tokens, base[2])
+    # the cancelled stream's partial output is a greedy prefix
+    g = res[1].gen_len
+    assert 1 <= g < MAX_NEW
+    np.testing.assert_array_equal(res[1].tokens, base[1][:g])

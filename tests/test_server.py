@@ -1,0 +1,146 @@
+"""OnlineServer: the thread-queue front end over the open-loop scheduler.
+
+One background loop thread owns the scheduler and all JAX state; callers
+only enqueue ops and read futures/queues.  Contracts: streamed tokens ==
+the terminal result's tokens == the fused baseline; every submitted
+request terminates exactly once (DONE, CANCELLED, TIMEOUT or REJECTED —
+nothing hangs); cancellation and deadlines work mid-flight; concurrent
+submitters from many threads are all served correctly."""
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler
+from repro.serve.server import OnlineServer, ServerClosed
+
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=64)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in (5, 8, 4, 6)]
+    base = [np.asarray(eng.generate(p[None, :], max_new=MAX_NEW)
+                       ["tokens"][0]) for p in prompts]
+    return cfg, eng, prompts, base
+
+
+def _server(eng, **kw):
+    return OnlineServer(ContinuousBatchingScheduler(eng, max_slots=2, **kw))
+
+
+def test_stream_result_and_baseline_agree(setup):
+    cfg, eng, prompts, base = setup
+    with _server(eng) as srv:
+        handles = [srv.submit(p, max_new=MAX_NEW) for p in prompts]
+        streamed = [list(h.stream()) for h in handles]
+        results = [h.result(timeout=60) for h in handles]
+    for got, res, b in zip(streamed, results, base):
+        assert res.state == "DONE"
+        np.testing.assert_array_equal(got, b)
+        np.testing.assert_array_equal(res.tokens, b)
+        assert res.admitted_s >= 0.0 and res.ttft_s >= 0.0
+
+
+def test_concurrent_submitters(setup):
+    """Many caller threads, one loop: every request is served and
+    token-identical to its fused baseline."""
+    cfg, eng, prompts, base = setup
+    results = {}
+    lock = threading.Lock()
+
+    def client(i):
+        h = srv.submit(prompts[i % len(prompts)], max_new=MAX_NEW)
+        r = h.result(timeout=60)
+        with lock:
+            results[h.uid] = (i % len(prompts), r)
+
+    with _server(eng) as srv:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(results) == 8
+    for _, (pi, r) in results.items():
+        assert r.state == "DONE"
+        np.testing.assert_array_equal(r.tokens, base[pi])
+
+
+def test_cancel_mid_flight(setup):
+    cfg, eng, prompts, base = setup
+    with _server(eng) as srv:
+        h = srv.submit(prompts[0], max_new=40)
+        for i, _tok in enumerate(h.stream()):
+            if i == 2:
+                h.cancel()
+        r = h.result(timeout=60)
+    assert r.state == "CANCELLED"
+    assert 1 <= r.gen_len < 40
+    np.testing.assert_array_equal(r.tokens, base[0][:min(r.gen_len, MAX_NEW)])
+
+
+def test_deadline_times_out(setup):
+    cfg, eng, prompts, base = setup
+    with _server(eng) as srv:
+        h = srv.submit(prompts[1], max_new=MAX_NEW, deadline_s=0.0)
+        r = h.result(timeout=60)
+    assert r.state == "TIMEOUT"
+    assert r.gen_len == 0
+
+
+def test_rejection_resolves_with_reason(setup):
+    cfg, eng, prompts, base = setup
+    with _server(eng) as srv:
+        h = srv.submit(prompts[0], max_new=10 ** 6)   # cannot fit max_len
+        r = h.result(timeout=60)
+        ok = srv.submit(prompts[2], max_new=MAX_NEW).result(timeout=60)
+    assert r.state == "REJECTED" and r.gen_len == 0
+    assert "does not fit" in h.reject_reason
+    assert ok.state == "DONE"       # the bad request didn't kill the loop
+    np.testing.assert_array_equal(ok.tokens, base[2])
+
+
+def test_priority_orders_admission(setup):
+    """With one slot and a backlog, the high-priority request admitted
+    after a queue of low-priority ones must finish before them."""
+    cfg, eng, prompts, base = setup
+    srv = OnlineServer(ContinuousBatchingScheduler(eng, max_slots=1))
+    with srv:
+        low = [srv.submit(prompts[i % len(prompts)], max_new=MAX_NEW,
+                          priority=0) for i in range(4)]
+        high = srv.submit(prompts[1], max_new=MAX_NEW, priority=3)
+        rh = high.result(timeout=60)
+        rl = [h.result(timeout=60) for h in low]
+    assert rh.state == "DONE"
+    np.testing.assert_array_equal(rh.tokens, base[1])
+    # the high-priority request jumped the part of the queue that had not
+    # been admitted yet when it arrived
+    later = [r for r in rl if r.admitted_s > rh.admitted_s]
+    assert later, "high-priority request did not overtake the backlog"
+
+
+def test_stop_without_drain_cancels_outstanding(setup):
+    cfg, eng, prompts, base = setup
+    srv = _server(eng).start()
+    handles = [srv.submit(prompts[i % len(prompts)], max_new=40)
+               for i in range(6)]
+    srv.stop(drain=False)
+    states = {h.result(timeout=60).state for h in handles}
+    assert states <= {"CANCELLED", "DONE"}
+    assert "CANCELLED" in states
+    with pytest.raises(ServerClosed):
+        srv.submit(prompts[0])
