@@ -11,7 +11,7 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA = "serve_bench/v5"
+SCHEMA = "serve_bench/v6"
 
 # every per-arch result of the four slot-cache disciplines
 RESULT_KEYS = {
@@ -39,6 +39,16 @@ OVERLOAD_KEYS = {
 }
 OVERLOAD_RUN_KEYS = {"ttft_s_by_priority", "latency_s_by_priority",
                      "preemptions", "by_state"}
+# the tensor-parallel discipline (serve_bench/v6): tp=1 vs tp=N forced-
+# host-device subprocess runs, token identity + per-shard traffic gates
+TP_KEYS = {
+    "config", "tp", "tp1", "tpN", "token_identical", "traffic_exact",
+    "kv_shards", "traffic_shards", "zero_steady_state_recompiles",
+    "decode_tokens_per_s_speedup",
+}
+TP_RUN_KEYS = {"decode_tokens_per_s", "measured_bytes", "analytic_bytes",
+               "traffic_exact", "steady_state_recompiles", "kv_shards",
+               "traffic_shards"}
 
 
 def check(path: str) -> None:
@@ -74,6 +84,19 @@ def check(path: str) -> None:
                 assert {"p50", "p95"} <= pct.keys(), (path, run)
         assert "1" in r["overload"]["ttft_s_by_priority"], (
             f"{path}: overload run has no high-priority tier")
+    assert report.get("tp_results"), f"{path}: no tp_results"
+    for r in report["tp_results"]:
+        missing = TP_KEYS - r.keys()
+        assert not missing, f"{path}: tp {r['config']} missing {missing}"
+        for run in ("tp1", "tpN"):
+            miss = TP_RUN_KEYS - r[run].keys()
+            assert not miss, f"{path}: {r['config']}.{run} missing {miss}"
+        assert r["tp"] >= 2, f"{path}: tp discipline must shard (tp >= 2)"
+    # the serve-discipline registry pin: the artifact must declare every
+    # registered discipline (repro/serve/disciplines.py)
+    names = report.get("disciplines")
+    assert names, f"{path}: no disciplines list"
+    assert "tp" in names, f"{path}: registry missing the tp discipline"
     print(f"{path}: ok ({SCHEMA})")
 
 

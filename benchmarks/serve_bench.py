@@ -43,6 +43,21 @@ iteration (asserted with a live probe); zero steady-state recompiles and
 meter-exact traffic with preemption ON (every token that crossed — prefill,
 decode, re-prefill after eviction — at exactly eq. 7-10 bytes).
 
+A seventh discipline benches tensor-parallel serving (DESIGN.md §11): the
+same persistent masked decode step over a forced-host-device ``(1, tp)``
+mesh, in fresh subprocesses (the device count is a process-level XLA
+flag).  Gates: tp=2 greedy tokens IDENTICAL to tp=1, byte-exact traffic on
+both (the per-shard entries sum to the single-device analytical model),
+zero steady-state recompiles, the pool actually cut on KV heads
+(kv_shards == tp), and — on hosts with >= 2 cores — decode tokens/s at
+tp=2 >= the gate x tp=1 (a 1-core host can't parallelize anything, so
+only the structural gates apply there).
+
+The discipline list itself is pinned to the serve-discipline registry
+(repro/serve/disciplines.py): a report that misses a registered
+discipline FAILS, so the bench, the README table, and benchmarks/tables.py
+cannot silently drift apart.
+
 Measures tokens/s, requests/s (wall AND busy — arrival sleeps are reported
 separately so idle-heavy traces can't inflate apparent efficiency), mean
 per-request latency, the paged-memory claim (peak resident KV bytes of the
@@ -69,8 +84,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import subprocess
 import sys
 import time
+from pathlib import Path
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -80,6 +98,7 @@ from repro.configs import get_config
 from repro.models import api
 from repro.serve import pages
 from repro.serve import slots
+from repro.serve.disciplines import NAMES as DISCIPLINE_NAMES
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 from repro.serve.splitbrain_engine import traffic_model_for
@@ -589,6 +608,142 @@ def bench_overload(arch: str, n_requests: int, max_slots: int,
     }
 
 
+# The tensor-parallel worker: ONE (tp) configuration per fresh subprocess —
+# the forced host device count is a process-level XLA flag, so tp=1 and
+# tp=2 cannot share a process.  Prints one "TPBENCH {json}" line.
+_TP_WORKER = r"""
+import dataclasses, json, sys, time
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import api
+from repro.serve import slots as slots_mod
+from repro.serve.engine import ServeEngine
+from repro.serve.splitbrain_engine import traffic_model_for
+
+spec = json.loads(sys.argv[1])
+tp = spec["tp"]
+assert jax.device_count() >= tp, jax.devices()
+cfg = get_config(spec["arch"]).reduced(**spec["overrides"])
+cfg = dataclasses.replace(
+    cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+mesh = (make_test_mesh(shape=(1, tp)) if tp > 1
+        else make_test_mesh(devices=jax.devices()[:1]))
+eng = ServeEngine(cfg, params, mesh=mesh, max_len=spec["max_len"],
+                  page_size=spec["page_size"], paged_attn="inplace")
+
+rng = np.random.default_rng(0)
+B, steps = spec["slots"], spec["steps"]
+prompts = [rng.integers(1, cfg.vocab_size, (int(rng.integers(2, 17)),)
+                        ).astype(np.int32) for _ in range(B)]
+cache = eng.init_slot_cache(B)
+toks = np.zeros((B,), np.int32)
+for i, p in enumerate(prompts):
+    assert eng.reserve_slot(i, len(p), steps + 2)
+    c1, t = eng.prefill_slot(p)
+    cache = eng.insert_slot(cache, c1, i)
+    eng.meter_tokens(len(p) - 1)   # prefill crossings (T0-1 convention)
+    toks[i] = t
+active = np.ones((B,), bool)
+counter = slots_mod.CompileCounter.instance()
+outs, t0, c0 = [], None, None
+for k in range(steps):
+    if k == 2:              # steps 0-1 may compile; steady state after that
+        c0 = counter.count
+        t0 = time.perf_counter()
+    nxt, cache = eng.decode_slots(cache, toks, active)
+    eng.meter_tokens(B)
+    toks = np.asarray(nxt)  # host sync every step, like the serve loop
+    outs.append(toks.tolist())
+dt = time.perf_counter() - t0
+measured = eng.measured_bytes()["total"]
+analytic = ((sum(len(p) - 1 for p in prompts) + B * steps)
+            * traffic_model_for(cfg).bytes_per_token())
+print("TPBENCH " + json.dumps({
+    "tp": tp,
+    "devices": jax.device_count(),
+    "tokens": outs,
+    "decode_tokens_per_s": B * (steps - 2) / dt,
+    "measured_bytes": measured,
+    "analytic_bytes": analytic,
+    "traffic_exact": measured == analytic,
+    "steady_state_recompiles": counter.count - c0,
+    "compile_counter_available": counter.available,
+    "kv_shards": eng.cache_stats(cache).get("kv_shards", 1),
+    "traffic_shards": eng.traffic_shards,
+}))
+"""
+
+
+def _tp_worker(tp: int, spec: Dict[str, Any],
+               timeout: int = 1800) -> Dict[str, Any]:
+    """Run one TP configuration in a subprocess with ``tp`` forced host
+    devices (mirrors tests/conftest.py::run_multidev)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={tp} "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"     # the TPU probe can hang headless runs
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH", ""), src) if p)
+    proc = subprocess.run(
+        [sys.executable, "-c", _TP_WORKER, json.dumps({**spec, "tp": tp})],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (tp, proc.stdout[-2000:],
+                                  proc.stderr[-2000:])
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("TPBENCH ")][-1]
+    return json.loads(line[len("TPBENCH "):])
+
+
+def bench_tp(arch: str, max_new: int, max_slots: int,
+             overrides: Dict[str, Any], page_size: int = 8,
+             tp: int = 2) -> Dict[str, Any]:
+    """The tensor-parallel serve discipline: the slot-decode workload at
+    tp=1 vs tp=``tp`` on forced host devices, in fresh subprocesses.
+
+    Gates (via main()'s FAIL path): greedy token identity, byte-exact
+    traffic on BOTH sides with equal totals (per-shard meter entries sum to
+    the single-device analytical model), zero steady-state recompiles, the
+    pool cut on KV heads (kv_shards == tp); the decode tokens/s speedup is
+    additionally gated on hosts with >= 2 cores."""
+    cfg = get_config(arch).reduced(**overrides)
+    spec = {
+        "arch": arch,
+        "overrides": overrides,
+        "max_len": pages.round_len(16 + max_new + 1, page_size, None),
+        "page_size": page_size,
+        "slots": max_slots,
+        "steps": max_new,
+    }
+    w1 = _tp_worker(1, spec)
+    wN = _tp_worker(tp, spec)
+    return {
+        "config": cfg.name,
+        "tp": tp,
+        "slots": max_slots,
+        "steps": max_new,
+        "page_size": page_size,
+        "max_len": spec["max_len"],
+        "host_cpus": os.cpu_count() or 1,
+        "tp1": w1,
+        "tpN": wN,
+        "token_identical": w1["tokens"] == wN["tokens"],
+        "traffic_exact": (w1["traffic_exact"] and wN["traffic_exact"]
+                          and w1["measured_bytes"] == wN["measured_bytes"]),
+        "kv_shards": wN["kv_shards"],
+        "traffic_shards": wN["traffic_shards"],
+        "zero_steady_state_recompiles":
+            (w1["steady_state_recompiles"] == 0
+             and wN["steady_state_recompiles"] == 0),
+        "decode_tokens_per_s_speedup":
+            wN["decode_tokens_per_s"] / w1["decode_tokens_per_s"],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -632,6 +787,10 @@ def main(argv=None) -> int:
         max(args.slots // 4, 2), overrides, page_size=args.page_size,
         prefill_chunk=args.prefill_chunk,
         max_new=max(max_new // 2, 8))]
+    # the tensor-parallel discipline: tp=1 vs tp=2 in fresh forced-host-
+    # device subprocesses (the device count is a process-level XLA flag)
+    tp_results = [bench_tp("llama2-7b", max_new, max(args.slots // 2, 4),
+                           overrides, page_size=args.page_size)]
 
     # rwkv keeps dense recurrent state (no-op page table): the memory gate
     # only applies where the pool actually pages KV
@@ -657,6 +816,13 @@ def main(argv=None) -> int:
     # TTFTs are scheduler-noise-dominated, so it gets headroom while the
     # structural gates (cancel SLO, recompiles, traffic) stay strict
     overload_gate = 4.0 if args.quick else 1.5
+    # tp timing gate: tp=2 must beat tp=1 decode tokens/s by this factor —
+    # but ONLY on a host that can actually run two shards concurrently; on
+    # a 1-core box (or in quick mode's sub-second walls) the structural
+    # gates (token identity, byte-exact traffic, recompiles, kv_shards)
+    # still apply in full while the wall-clock one is moot
+    tp_gate = 1.6
+    tp_timing_gated = (not args.quick) and (os.cpu_count() or 1) >= 2
     summary = {
         r["config"]: {
             "requests_per_s_speedup": round(r["requests_per_s_speedup"], 2),
@@ -689,6 +855,20 @@ def main(argv=None) -> int:
             "traffic_exact": r["traffic_exact"],
         } for r in overload_results
     }
+    summary["tp"] = {
+        r["config"]: {
+            "tp": r["tp"],
+            "decode_tokens_per_s_speedup":
+                round(r["decode_tokens_per_s_speedup"], 2),
+            "token_identical": r["token_identical"],
+            "traffic_exact": r["traffic_exact"],
+            "kv_shards": r["kv_shards"],
+            "traffic_shards": r["traffic_shards"],
+            "zero_steady_state_recompiles":
+                r["zero_steady_state_recompiles"],
+            "timing_gated": tp_timing_gated,
+        } for r in tp_results
+    }
     summary["prefix"] = {
         r["config"]: {
             "prefix_overlap": round(r["prefix_overlap"], 2),
@@ -707,10 +887,11 @@ def main(argv=None) -> int:
         } for r in prefix_results
     }
     report = {
-        "schema": "serve_bench/v5",
+        "schema": "serve_bench/v6",
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "quick": args.quick,
+        "disciplines": list(DISCIPLINE_NAMES),
         "gate_requests_per_s_speedup": gate,
         "gate_paged_memory_saving": mem_gate,
         "gate_paged_vs_dense_requests_per_s": rps_gate,
@@ -719,11 +900,25 @@ def main(argv=None) -> int:
         "gate_prefix_prefill_uplift": prefix_gate,
         "gate_prefix_pages_reduction": prefix_pages_gate,
         "gate_overload_ttft_ratio": overload_gate,
+        "gate_tp_decode_speedup": tp_gate,
+        "tp_timing_gated": tp_timing_gated,
         "results": results,
         "prefix_results": prefix_results,
         "overload_results": overload_results,
+        "tp_results": tp_results,
         "summary": summary,
     }
+    # registry cross-check: every discipline in the registry must have a
+    # section in this report — a bench that forgets one FAILS, it doesn't
+    # silently drift (repro/serve/disciplines.py)
+    covered = set()
+    for r in results:
+        covered |= {d for d in ("sequential", "continuous", "paged_gather",
+                                "paged") if r.get(d) is not None}
+    covered |= {"prefix"} if prefix_results else set()
+    covered |= {"overload"} if overload_results else set()
+    covered |= {"tp"} if tp_results else set()
+    missing_disciplines = [n for n in DISCIPLINE_NAMES if n not in covered]
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
@@ -755,6 +950,14 @@ def main(argv=None) -> int:
                 and r["steady_state_recompiles"] == 0
                 and r["traffic_exact"])
 
+    def tp_ok(r):
+        return (r["token_identical"]
+                and r["traffic_exact"]
+                and r["zero_steady_state_recompiles"]
+                and r["kv_shards"] == r["tp"]
+                and (not tp_timing_gated
+                     or r["decode_tokens_per_s_speedup"] >= tp_gate))
+
     ok = all(r["requests_per_s_speedup"] >= gate
              and r["steady_state_recompiles"] == 0
              and r["paged_steady_state_recompiles"] == 0
@@ -762,7 +965,9 @@ def main(argv=None) -> int:
              and r["traffic_exact"]
              and paged_ok(r) for r in results) \
         and all(prefix_ok(r) for r in prefix_results) \
-        and all(overload_ok(r) for r in overload_results)
+        and all(overload_ok(r) for r in overload_results) \
+        and all(tp_ok(r) for r in tp_results) \
+        and not missing_disciplines
     if not ok:
         print(f"FAIL: continuous < {gate}x sequential requests/s, paged < "
               f"{mem_gate}x memory saving, paged < {rps_gate}x dense "
@@ -771,9 +976,13 @@ def main(argv=None) -> int:
               ">= gather, steady-state recompile, traffic mismatch, a "
               f"prefix-cache gate (token identity, < {prefix_gate}x "
               f"prefill tokens/s, < {prefix_pages_gate}x page reduction, "
-              f"no hits), or an overload gate (high-prio p95 TTFT > "
+              f"no hits), an overload gate (high-prio p95 TTFT > "
               f"{overload_gate}x unloaded, no preemptions, cancelled pages "
-              "not freed in one iteration)",
+              "not freed in one iteration), a tp gate (tp tokens differ "
+              "from tp=1, traffic inexact, recompile, pool not head-cut"
+              + (f", decode speedup < {tp_gate}x" if tp_timing_gated
+                 else "")
+              + f"), or registry coverage ({missing_disciplines})",
               file=sys.stderr)
     return 0 if ok else 1
 

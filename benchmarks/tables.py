@@ -226,6 +226,24 @@ def kernel_bench() -> List[Row]:
 
 
 
+def serve_disciplines() -> List[Row]:
+    """Serve-discipline registry (repro/serve/disciplines.py): one row per
+    registered discipline so the CSV report enumerates exactly what
+    serve_bench gates.  The derived value counts registered disciplines
+    (cross-checked against the BENCH_serve.json `disciplines` list by
+    check_schema.py); the claim column carries each headline gate."""
+    from repro.serve.disciplines import DISCIPLINES, markdown_table
+
+    us, _ = _timeit(markdown_table)
+    rows: List[Row] = [
+        (f"serve.discipline.{d.name}", us, float(i + 1), d.gate)
+        for i, d in enumerate(DISCIPLINES)
+    ]
+    rows.append(("serve.disciplines_registered", us, float(len(DISCIPLINES)),
+                 "7 (serve_bench/v6)"))
+    return rows
+
+
 def ablation_laq_slack() -> List[Row]:
     """Beyond-paper ablation: the LAQ error-vs-adders trade-off.
 
@@ -260,4 +278,4 @@ def ablation_laq_slack() -> List[Row]:
 
 ALL_TABLES = [table1_gates, table2_energy, table3_interface, table4_area_cost,
               table5_volume, tables67_fpga, fig3_security, kernel_bench,
-              ablation_laq_slack]
+              serve_disciplines, ablation_laq_slack]

@@ -57,6 +57,9 @@ class ParallelConfig:
     decode_attn: str = "xla"          # "shard_map" = LSE-combined flash decode (Perf H2)
     aligned_decode: bool = True       # lockstep decode -> scalar-index cache writes (Perf H2)
     gather_fsdp_weights: bool = False # ZeRO-3 per-layer weight gather (Perf H4)
+    exact_tp: bool = False            # serve TP: all-gather before down-projections
+                                      # so no float contraction is ever split
+                                      # (greedy token identity, DESIGN.md §11)
 
 
 @dataclass(frozen=True)

@@ -129,3 +129,85 @@ def distributed_decode_attention(mesh: Mesh, axis_name: str = "model",
         in_specs=(P(b), P(b, None, axis_name, None),
                   P(b, None, axis_name, None), P(b, axis_name)),
         out_specs=P(b), check_rep=False)
+
+
+# --------------------------------------------- TP paged decode attention
+def tp_paged_decode_attention(mesh: Mesh, axis_name: str = "model", *,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None,
+                              scale: Optional[float] = None,
+                              batch_axes: tuple = (),
+                              interpret: bool = True):
+    """Per-shard Pallas paged flash-decode over the HEAD-CUT pool
+    (DESIGN.md §11).
+
+    q: (B, Hq, 1, D) cut on heads over ``axis_name``;
+    pools: (num_pages, ps, Hkv, D) cut on KV heads;
+    page_table (B, P) / cache_len (B,): host-owned, replicated.
+
+    Requires Hq % tp == 0 and Hkv % tp == 0.  Contiguous head blocks keep
+    GQA alignment in-shard — q heads [i*Hq/tp, ...) attend exactly the kv
+    heads [i*Hkv/tp, ...) their column-sharded wk/wv produced — so each
+    shard runs the UNCHANGED flash-decode grid on its (N, ps, Hkv/tp, D)
+    slice and NO collective is needed at all: the output comes back cut on
+    heads, ready for the row-sharded wo.
+    """
+    from repro.kernels import paged_attention as _pa
+
+    def local(q, k_pool, v_pool, table, length):
+        return _pa.paged_decode_attention(
+            q, k_pool, v_pool, table, length, window=window,
+            softcap=softcap, scale=scale, interpret=interpret)
+
+    b = tuple(a for a in batch_axes if a in mesh.axis_names) or None
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(b, axis_name, None, None),
+                  P(None, None, axis_name, None),
+                  P(None, None, axis_name, None),
+                  P(b, None), P(b)),
+        out_specs=P(b, axis_name, None, None), check_rep=False)
+
+
+def tp_paged_decode_attention_merge(mesh: Mesh, axis_name: str = "model", *,
+                                    softcap: Optional[float] = None,
+                                    scale: Optional[float] = None,
+                                    batch_axes: tuple = (),
+                                    interpret: bool = True):
+    """The Hkv < tp fallback: heads replicate, the PAGE axis splits.
+
+    When the TP degree does not divide the KV head count the pool stays
+    replicated (sharding rules auto-drop the axis), so the head-cut path
+    has nothing to cut.  Instead each shard walks a 1/tp slice of every
+    slot's page-table columns — its local flash-decode sees lengths
+    rebased to its page window — and the per-shard partial (out, lse)
+    pairs combine exactly in log-sum-exp space with two tiny psums
+    (O(B*Hq*D) wire), the paged twin of ``distributed_decode_attention``.
+    Sliding-window leaves never page (serve/pages.py), so the merge only
+    covers the window-free case.
+    """
+    from repro.kernels import paged_attention as _pa
+
+    def local(q, k_pool, v_pool, table, length):
+        B, Hq, _, D = q.shape
+        ps = k_pool.shape[1]
+        span = table.shape[1] * ps          # positions this shard covers
+        off = jax.lax.axis_index(axis_name) * span
+        # rebase: local position p corresponds to global off + p, so the
+        # kernel's `pos < length` masking is exact under the clipped length
+        len_loc = jnp.clip(length - off, 0, span)
+        out, lse = _pa.paged_decode_attention(
+            q, k_pool, v_pool, table, len_loc, softcap=softcap,
+            scale=scale, interpret=interpret, return_lse=True)
+        lse = lse.reshape(B, Hq, 1)          # (B, Hkv, group) -> head order
+        m = jax.lax.pmax(lse, axis_name)
+        w = jnp.exp(lse - m)                 # empty shards drop out (w ~ 0)
+        num = jax.lax.psum(out.astype(jnp.float32) * w[..., None], axis_name)
+        den = jax.lax.psum(w, axis_name)
+        return (num / jnp.maximum(den[..., None], 1e-30)).astype(q.dtype)
+
+    b = tuple(a for a in batch_axes if a in mesh.axis_names) or None
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(b), P(), P(), P(b, axis_name), P(b)),
+        out_specs=P(b), check_rep=False)

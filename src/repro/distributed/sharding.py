@@ -38,6 +38,8 @@ _PARAM_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
     (r".*/A_log$", ("model", None)),
     (r"^embed$", ("model", "fsdp")),
     (r"^lm_head$", ("fsdp", "model")),
+    # split-brain stacked weights name the unembedding "head" (not lm_head)
+    (r"(^|.*/)head$", ("fsdp", "model")),
     (r".*/u$", (None, None)),
 )
 
@@ -49,6 +51,29 @@ _CACHE_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
     (r".*x_(tm|cm)$", ("batch", "model")),             # rwkv shift state (L,B,d)
     (r".*ssm$", ("batch", "model", None)),             # hymba ssm (L,B,d,N)
     (r".*len$", ("batch",)),
+)
+
+# Serve-path slot-cache rules (DESIGN.md §11): the TP serving mesh cuts the
+# KV cache on HEADS, not sequence — each model shard owns the Hkv/tp heads
+# its column-sharded wk/wv produce, so decode attention needs no KV
+# collective at all.  Shape-checking (`_fit`) still applies: an indivisible
+# Hkv (or head count) silently replicates, which IS the Hkv < tp fallback.
+_SERVE_CACHE_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    # dense / ring KV: (..., B, kv_heads, S|W, hd) — heads over "model"
+    (r".*(^|/)(k|v|cross_k|cross_v)(/\d+)?$", ("batch", "model", None, None)),
+    (r".*wkv$", ("batch", "model", None, None)),      # rwkv state (L,B,H,D,D)
+    (r".*x_(tm|cm)$", ("batch", "model")),             # rwkv shift state (L,B,d)
+    (r".*ssm$", ("batch", "model", None)),             # hymba ssm (L,B,d,N)
+    (r".*len$", ("batch",)),
+)
+
+# Page-pool leaf rules: trailing (num_pages, page_size, Hkv, hd) — the pool
+# is cut on KV heads so each shard owns a (N, ps, Hkv/tp, hd) slice and the
+# paged flash-decode grid is unchanged per shard.  Page ids stay global
+# (tables replicated), so HostPager/CoW/prefix logic needs no distribution
+# awareness.
+_POOL_CACHE_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    (r".*(^|/)(k|v|cross_k|cross_v)(/\d+)?$", (None, None, "model", None)),
 )
 
 
@@ -120,9 +145,7 @@ def _match(rules, key: str):
     return None
 
 
-def param_pspecs(params, cfg: ModelConfig, mesh: Mesh):
-    """PartitionSpec pytree for params (works for raw or LAQ-quantized trees
-    and for AdamW moment trees that mirror them)."""
+def _param_pspecs_impl(params, cfg: ModelConfig, mesh: Mesh, transform=None):
     ax = MeshAxes(mesh, cfg)
 
     def spec(path, leaf):
@@ -141,9 +164,40 @@ def param_pspecs(params, cfg: ModelConfig, mesh: Mesh):
             matched = matched[-1:]  # per-out-channel scales
         if not hasattr(leaf, "shape"):
             return P()
+        if transform is not None:
+            matched = transform(matched)
         return _fit(matched, leaf.shape, ax)
 
     return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_pspecs(params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree for params (works for raw or LAQ-quantized trees
+    and for AdamW moment trees that mirror them)."""
+    return _param_pspecs_impl(params, cfg, mesh)
+
+
+def serve_param_pspecs(params, cfg: ModelConfig, mesh: Mesh):
+    """Column-ONLY tensor parallelism for FLOAT serving params
+    (DESIGN.md §11): the model axis survives only on a weight's OUTPUT
+    (last) dim; row-parallel (contraction-dim) cuts are dropped.
+
+    Why: a row cut splits the contraction, so XLA psums partial float sums
+    in a different association than the single-device dot — a ~1-ULP
+    perturbation that bf16 rounding turns into KV-cache bit flips, and the
+    serve contract is TOKEN IDENTITY with single-device greedy, not
+    allclose.  Column cuts only ever all-gather exact per-shard results
+    (no arithmetic collectives), so the math is bitwise unchanged.  The
+    quantized split-brain path keeps the full Megatron column/row rules:
+    its matmuls accumulate in int32, where partial-sum order cannot change
+    the result."""
+    def column_only(matched):
+        last = len(matched) - 1
+        return tuple(
+            None if (log in ("model", "expert") and i != last) else log
+            for i, log in enumerate(matched))
+
+    return _param_pspecs_impl(params, cfg, mesh, transform=column_only)
 
 
 def cache_pspecs(cache, cfg: ModelConfig, mesh: Mesh):
@@ -157,6 +211,58 @@ def cache_pspecs(cache, cfg: ModelConfig, mesh: Mesh):
         return _fit(matched, leaf.shape, ax)
 
     return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def serve_cache_pspecs(cache, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree for a DENSE serve slot cache (head-cut TP
+    layout).  Works on arrays or ShapeDtypeStructs."""
+    ax = MeshAxes(mesh, cfg)
+
+    def spec(path, leaf):
+        key = _path_str(path)
+        matched = _match(_SERVE_CACHE_RULES, key)
+        if matched is None or not hasattr(leaf, "shape"):
+            return P()
+        return _fit(matched, leaf.shape, ax)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def pool_pspecs(pcache, cfg: ModelConfig, mesh: Mesh, sa):
+    """PartitionSpec pytree for a PAGED serve slot cache.
+
+    ``sa`` is the per-leaf sequence-axis tree (``serve.pages.seq_axes``):
+    leaves with ``s_ax >= 0`` are in pool layout (trailing
+    ``(num_pages, page_size, Hkv, hd)``) and cut on KV heads; the rest keep
+    their dense slot layout and take the serve rules.  Shape-checked like
+    every rule here — an Hkv that ``tp`` does not divide replicates.
+    """
+    ax = MeshAxes(mesh, cfg)
+
+    def spec(path, leaf, s_ax):
+        if not hasattr(leaf, "shape"):
+            return P()
+        key = _path_str(path)
+        paged = s_ax is not None and s_ax >= 0
+        matched = _match(_POOL_CACHE_RULES if paged else _SERVE_CACHE_RULES,
+                         key)
+        if matched is None:
+            return P()
+        return _fit(matched, leaf.shape, ax)
+
+    return jax.tree_util.tree_map_with_path(spec, pcache, sa)
+
+
+def pool_kv_cut(pool_specs, sa, tp: int, model_axis: str) -> int:
+    """The pool's effective KV head cut: ``tp`` when EVERY paged leaf
+    actually sharded over the model axis (divisible Hkv), else 1 — a
+    replicated leaf would break per-shard byte exactness."""
+    if tp <= 1:
+        return 1
+    flags = jax.tree.map(
+        lambda sp, s_ax: (s_ax < 0) or (model_axis in tuple(sp)),
+        pool_specs, sa, is_leaf=lambda x: isinstance(x, P))
+    return tp if all(jax.tree.leaves(flags)) else 1
 
 
 def batch_pspecs(cfg: ModelConfig, mesh: Mesh, kind: str):
@@ -221,6 +327,32 @@ def gather_fsdp(tree, cfg: ModelConfig):
         return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, sp))
 
     return jax.tree_util.tree_map_with_path(constrain, tree, specs, fsdp_specs)
+
+
+def pin_tp_exact(x, cfg: ModelConfig):
+    """All-gather a model-axis-sharded activation (DESIGN.md §11).
+
+    Applied to the INPUT of every down-projection (``o @ wo``, ``h @ w2``,
+    recurrent out-projections) when ``cfg.parallel.exact_tp`` is set: the
+    activation is column-cut output (attention heads / d_ff), and letting
+    XLA run the following dot contraction-parallel would psum float partial
+    sums in a different association than the single-device matmul — a
+    1-ULP perturbation that bf16 KV rounding amplifies into greedy-token
+    flips.  Constraining to replicated forces an ALL-GATHER (exact bit
+    movement, no arithmetic) and a redundant but bitwise-single-device dot
+    on every shard.  Up-projections and attention stay genuinely
+    tensor-parallel; only the cheap (d_model-output) dots are replicated.
+    No-op outside a mesh context or when ``exact_tp`` is False (training
+    keeps the Megatron row-parallel dataflow)."""
+    from repro.distributed import runtime
+
+    if not cfg.parallel.exact_tp:
+        return x
+    mesh = runtime.ambient_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim))))
 
 
 def pin_batch(x, cfg: ModelConfig):

@@ -73,13 +73,41 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len, *,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            scale: Optional[float] = None,
-                           use_pallas: Optional[bool] = None):
+                           use_pallas: Optional[bool] = None,
+                           model_axis: Optional[str] = None,
+                           batch_axes: tuple = ()):
     """Gather-free decode attention THROUGH the page table: no dense-view
     transient (serve/pages.py::gather_view) is ever materialized.  The
     Pallas kernel walks ``pool[table]`` page-block-wise (flash-decode over
     the split-K page axis, DESIGN.md §6); the reference is a ``lax.scan``
-    over pages with the same online-softmax accumulation."""
+    over pages with the same online-softmax accumulation.
+
+    On a TP serving mesh (``model_axis`` names a >1-sized mesh axis) the
+    Pallas branch dispatches per shard (DESIGN.md §11): divisible head
+    counts run the unchanged grid on each shard's head-cut pool slice with
+    no collective; an indivisible Hkv replicates heads and splits the page
+    axis instead, merging partials in log-sum-exp space.  The jnp reference
+    needs no routing — XLA partitions it under GSPMD directly."""
     if _dispatch(use_pallas):
+        if model_axis is not None:
+            from repro.distributed import collectives, runtime
+            mesh = runtime.ambient_mesh()
+            tp = (int(mesh.shape[model_axis])
+                  if mesh is not None and model_axis in mesh.axis_names
+                  else 1)
+            Hq, Hkv = q.shape[1], k_pool.shape[2]
+            if tp > 1 and Hq % tp == 0:
+                if Hkv % tp == 0:
+                    fn = collectives.tp_paged_decode_attention(
+                        mesh, model_axis, window=window, softcap=softcap,
+                        scale=scale, batch_axes=batch_axes,
+                        interpret=not _ON_TPU)
+                    return fn(q, k_pool, v_pool, page_table, cache_len)
+                if window is None and page_table.shape[1] % tp == 0:
+                    fn = collectives.tp_paged_decode_attention_merge(
+                        mesh, model_axis, softcap=softcap, scale=scale,
+                        batch_axes=batch_axes, interpret=not _ON_TPU)
+                    return fn(q, k_pool, v_pool, page_table, cache_len)
         return _pa.paged_decode_attention(q, k_pool, v_pool, page_table,
                                           cache_len, window=window,
                                           softcap=softcap, scale=scale,

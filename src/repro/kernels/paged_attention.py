@@ -46,8 +46,13 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 
 
 def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, scale: float, window: Optional[int],
-            softcap: Optional[float], ps: int, n_pages: int, group: int):
+            *rest, scale: float, window: Optional[int],
+            softcap: Optional[float], ps: int, n_pages: int, group: int,
+            with_lse: bool = False):
+    if with_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        (m_ref, l_ref, acc_ref), lse_ref = rest, None
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -94,13 +99,18 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(p == n_pages - 1)
     def _done():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-                       ).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if lse_ref is not None:
+            # log-sum-exp of this invocation's logits, for cross-shard
+            # combination (a slot with no local pages reports ~ -inf and
+            # drops out of the merge)
+            lse_ref[0, 0] = m_ref[..., 0] + jnp.log(l[..., 0])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("window", "softcap", "scale", "interpret"),
+    static_argnames=("window", "softcap", "scale", "interpret", "return_lse"),
 )
 def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, page_table: jnp.ndarray,
@@ -108,11 +118,17 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            scale: Optional[float] = None,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = True,
+                           return_lse: bool = False):
     """q (B, Hq, 1, D); pools (num_pages, page_size, Hkv, D);
     page_table (B, P) int32 physical page ids; cache_len (B,) valid lengths.
     Hq % Hkv == 0.  Token position t of slot b lives at
     ``(page_table[b, t // page_size], t % page_size)``.
+
+    ``return_lse=True`` additionally returns the per-head log-sum-exp
+    (B, Hkv, group) f32 of the computed logits, so partial results over a
+    SPLIT page axis can be exactly combined across TP shards
+    (``distributed.collectives.tp_paged_decode_attention_merge``).
     """
     B, Hq, _, D = q.shape
     ps, Hkv = k_pool.shape[1], k_pool.shape[2]
@@ -123,6 +139,15 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     # page is fetched once per KV head (not once per q head)
     qg = q[:, :, 0, :].reshape(B, Hkv, group, D)
 
+    out_specs = pl.BlockSpec((1, 1, group, D),
+                             lambda b, h, p, tbl, ln: (b, h, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype)
+    if return_lse:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1, group),
+                                  lambda b, h, p, tbl, ln: (b, h, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B, Hkv, group), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # page_table, cache_len
         grid=(B, Hkv, P),
@@ -134,8 +159,7 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
             pl.BlockSpec((1, ps, 1, D),
                          lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, group, D),
-                               lambda b, h, p, tbl, ln: (b, h, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),
@@ -145,12 +169,15 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     out = pl.pallas_call(
         functools.partial(
             _kernel, scale=s, window=window, softcap=softcap, ps=ps,
-            n_pages=P, group=group),
+            n_pages=P, group=group, with_lse=return_lse),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), jnp.asarray(cache_len, jnp.int32),
       qg, k_pool, v_pool)
+    if return_lse:
+        out, lse = out
+        return out.reshape(B, Hq, 1, D), lse
     return out.reshape(B, Hq, 1, D)

@@ -21,6 +21,12 @@
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --page-size 8 --priority 0,0,0,1 --deadline-s 5 \
       --preemption on
+
+  # tensor-parallel serving over a (1, tp) device mesh (DESIGN.md §11);
+  # on a CPU-only host, force visible devices first:
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 JAX_PLATFORMS=cpu \
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --page-size 8 --tp 2
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
 from repro.models import api
 from repro.serve import pages
 from repro.serve.engine import ServeEngine
@@ -82,6 +89,12 @@ def main(argv=None):
                     help="per-request deadline in seconds from serve-loop "
                          "start; a request not finished by then terminates "
                          "as TIMEOUT (slot and pages freed)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: serve over a "
+                         "(data=1, model=tp) mesh — params column-cut, page "
+                         "pool cut on KV heads, token-identical to --tp 1 "
+                         "(needs >= tp visible devices; see module docstring "
+                         "for forcing host devices)")
     ap.add_argument("--preemption", choices=("on", "off"), default="off",
                     help="SLA-aware preemption: when a higher-priority "
                          "request cannot be admitted, evict a lower-"
@@ -122,11 +135,19 @@ def main(argv=None):
     params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
 
+    mesh = None
+    if args.tp > 1:
+        if jax.device_count() < args.tp:
+            ap.error(f"--tp {args.tp} needs >= {args.tp} devices, have "
+                     f"{jax.device_count()} (see module docstring for "
+                     f"forcing host devices)")
+        mesh = make_test_mesh(shape=(1, args.tp))
+
     if args.continuous:
         # pages AND prefill chunks must both tile the cache
         max_len = pages.round_len(args.prompt_len + args.max_new + 1,
                                   args.page_size, args.prefill_chunk)
-        eng = ServeEngine(cfg, params, max_len=max_len,
+        eng = ServeEngine(cfg, params, mesh=mesh, max_len=max_len,
                           page_size=args.page_size, num_pages=args.num_pages,
                           paged_attn=args.paged_attn,
                           prefix_cache=args.prefix_cache)
@@ -147,6 +168,7 @@ def main(argv=None):
         out = sched.run(reqs)
         report = {
             "arch": cfg.name,
+            "tp": args.tp,
             "requests": args.requests,
             "slots": args.slots,
             "steps": out["steps"],
@@ -170,12 +192,13 @@ def main(argv=None):
         (args.batch, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
         if cfg.frontend_tokens else None)
 
-    eng = ServeEngine(cfg, params,
+    eng = ServeEngine(cfg, params, mesh=mesh,
                       max_len=args.prompt_len + args.max_new + 1)
     out = eng.generate(prompts, max_new=args.max_new, frontend=frontend,
                        eos_id=args.eos_id)
     print(json.dumps({
         "arch": cfg.name,
+        "tp": args.tp,
         "batch": args.batch,
         "generated": out["tokens"][:2, :8].tolist(),
         "gen_len": out["gen_len"].tolist(),

@@ -20,8 +20,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed import sharding as _shd
 from repro.kernels import ops
 from repro.models import layers as L
+
+
+def _pin(cfg: ModelConfig):
+    """Serve-TP exactness hook for down-projection inputs (no-op unless
+    cfg.parallel.exact_tp and a mesh is ambient — see shd.pin_tp_exact)."""
+    if not cfg.parallel.exact_tp:
+        return None
+    return lambda a: _shd.pin_tp_exact(a, cfg)
 
 
 def block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
@@ -68,9 +77,10 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 def _ssm_branch(p, x, cfg: ModelConfig, state=None):
     """x: (B, T, d) -> (out, new_state (B, d, N))."""
     ssm_p = p["ssm"]
+    pin = _pin(cfg) or (lambda a: a)
     h = jax.nn.silu(L.linear(x, ssm_p["w_in"]))
     delta = jax.nn.softplus(
-        L.linear(L.linear(x, ssm_p["w_delta"]), ssm_p["w_delta_up"])
+        L.linear(pin(L.linear(x, ssm_p["w_delta"])), ssm_p["w_delta_up"])
     ).astype(jnp.float32)
     A = -jnp.exp(ssm_p["A_log"].astype(jnp.float32))
     Bm = L.linear(x, ssm_p["w_B"]).astype(jnp.float32)
@@ -79,7 +89,7 @@ def _ssm_branch(p, x, cfg: ModelConfig, state=None):
                                       use_pallas=cfg.use_pallas,
                                       algorithm=cfg.ssm_scan)
     y = y + h * ssm_p["D"].astype(h.dtype)
-    return L.linear(y, ssm_p["w_out"]), new_state
+    return L.linear(pin(y), ssm_p["w_out"]), new_state
 
 
 def _embed_decode(params, tokens: jnp.ndarray, cfg: ModelConfig):
@@ -95,15 +105,17 @@ def _fuse_tail(p, x, xn, o, sstate, cfg: ModelConfig):
     o: (B, Hq, 1, hd) -> (new x, new ssm state)."""
     B = x.shape[0]
     hd = cfg.resolved_head_dim
+    pin = _pin(cfg) or (lambda a: a)
     attn_out = L.linear(
-        o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd),
+        pin(o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)),
         p["attn"]["wo"])
     ssm_out, new_state = _ssm_branch(p, xn, cfg, state=sstate)
     fused = 0.5 * (L.rmsnorm(attn_out, p["ln_attn_out"], cfg.norm_eps)
                    + L.rmsnorm(ssm_out, p["ln_ssm_out"], cfg.norm_eps))
     x = x + fused
     y = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
-    x = x + L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"])
+    x = x + L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"],
+                     pin_fn=_pin(cfg))
     return x, new_state
 
 
@@ -193,7 +205,9 @@ def paged_decode_step(params, cache, table, tokens: jnp.ndarray,
         vc = L.paged_cache_write(vc, v, table, pos, write)
         o = ops.paged_decode_attention(q, kc, vc, table, pos + 1,
                                        window=window,
-                                       use_pallas=cfg.use_pallas)
+                                       use_pallas=cfg.use_pallas,
+                                       model_axis=cfg.parallel.model_axis,
+                                       batch_axes=cfg.parallel.batch_axes)
         x, new_state = _fuse_tail(p, x, xn, o, sstate, cfg)
         new_state = jnp.where(write[:, None, None], new_state, sstate)
         return x, (kc, vc, new_state)

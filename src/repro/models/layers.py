@@ -60,10 +60,16 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.
 
 
 def swiglu(x: jnp.ndarray, w1, w3, w2,
-           use_pallas: Optional[bool] = None) -> jnp.ndarray:
-    """FFN(x) = W2 . (silu(W1 x) * (W3 x)) — eq. (4)/(5) of the paper."""
-    return linear(jax.nn.silu(linear(x, w1, use_pallas))
-                  * linear(x, w3, use_pallas), w2, use_pallas)
+           use_pallas: Optional[bool] = None, pin_fn=None) -> jnp.ndarray:
+    """FFN(x) = W2 . (silu(W1 x) * (W3 x)) — eq. (4)/(5) of the paper.
+
+    ``pin_fn`` (serve TP exactness, DESIGN.md §11) is applied to the hidden
+    activation before the W2 contraction — sharding.pin_tp_exact gathers a
+    d_ff-sharded hidden so the down-projection is never split."""
+    h = jax.nn.silu(linear(x, w1, use_pallas)) * linear(x, w3, use_pallas)
+    if pin_fn is not None:
+        h = pin_fn(h)
+    return linear(h, w2, use_pallas)
 
 
 # ----------------------------------------------------------------------------
@@ -94,9 +100,11 @@ def attn_apply(p: dict, x: jnp.ndarray, *, num_heads: int, num_kv_heads: int,
                head_dim: int, positions: jnp.ndarray, rope_theta: float,
                window: Optional[int] = None, softcap: Optional[float] = None,
                causal: bool = True, use_pallas: bool = False,
-               kv: Optional[tuple] = None) -> jnp.ndarray:
+               kv: Optional[tuple] = None, pin_fn=None) -> jnp.ndarray:
     """Full attention block (prefill/training path). ``kv`` overrides K/V
-    (cross-attention: keys/values from another sequence, no rope)."""
+    (cross-attention: keys/values from another sequence, no rope).
+    ``pin_fn`` gathers the head-sharded attention output before the wo
+    contraction (serve TP exactness, DESIGN.md §11)."""
     B, T, _ = x.shape
     q, k, v = qkv_project(p, x, num_heads, num_kv_heads, head_dim)
     if kv is None:
@@ -108,6 +116,8 @@ def attn_apply(p: dict, x: jnp.ndarray, *, num_heads: int, num_kv_heads: int,
     o = ops.attention(q, k, v, causal=causal, window=window, softcap=softcap,
                       use_pallas=use_pallas)
     o = o.transpose(0, 2, 1, 3).reshape(B, T, num_heads * head_dim)
+    if pin_fn is not None:
+        o = pin_fn(o)
     return linear(o, p["wo"])
 
 

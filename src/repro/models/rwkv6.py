@@ -18,11 +18,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as _shd
 from repro.kernels import ops
 from repro.models.layers import dense_init, linear, rmsnorm
 
 HEAD_DIM = 64  # RWKV6 uses 64-wide heads
 LORA_DIM = 64
+
+
+def _pin(cfg: ModelConfig):
+    """Serve-TP exactness hook (shd.pin_tp_exact): gathers model-sharded
+    activations before contractions AND before the ln_x group norm, whose
+    mean reduces over the sharded channel axis.  Identity unless
+    cfg.parallel.exact_tp is set under an ambient mesh."""
+    if not cfg.parallel.exact_tp:
+        return lambda a: a
+    return lambda a: _shd.pin_tp_exact(a, cfg)
 
 
 def block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
@@ -76,8 +87,9 @@ def _time_mix(p, x, cfg, state=None, x_prev=None):
     r = linear(xr, p["wr"]).reshape(B, T, H, HEAD_DIM).transpose(0, 2, 1, 3)
     k = linear(xk, p["wk"]).reshape(B, T, H, HEAD_DIM).transpose(0, 2, 1, 3)
     v = linear(xv, p["wv"]).reshape(B, T, H, HEAD_DIM).transpose(0, 2, 1, 3)
+    pin = _pin(cfg)
     g = jax.nn.silu(linear(xg, p["wg"]))
-    dw = linear(jnp.tanh(linear(xw, p["w_lora_a"])), p["w_lora_b"])
+    dw = linear(pin(jnp.tanh(linear(xw, p["w_lora_a"]))), p["w_lora_b"])
     w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dw.astype(jnp.float32))))
     w = w.reshape(B, T, H, HEAD_DIM).transpose(0, 2, 1, 3)
     if cfg.rwkv_chunk and T > 1:
@@ -88,16 +100,18 @@ def _time_mix(p, x, cfg, state=None, x_prev=None):
         out, new_state = ops.rwkv6(r, k, v, w.astype(r.dtype),
                                    p["u"].astype(jnp.float32), state,
                                    use_pallas=cfg.use_pallas)
-    out = out.transpose(0, 2, 1, 3).reshape(B, T, d)
+    out = pin(out.transpose(0, 2, 1, 3).reshape(B, T, d))
     out = rmsnorm(out, p["ln_x"], cfg.norm_eps) * g
-    return linear(out, p["wo"]), new_state, x[:, -1]
+    return linear(pin(out), p["wo"]), new_state, x[:, -1]
 
 
-def _channel_mix(p, x, x_prev=None):
+def _channel_mix(p, x, x_prev=None, pin_fn=None):
     xs = _token_shift(x, x_prev)
     mix = p["mix"].astype(x.dtype)
     xk = x + mix[1] * (xs - x)
     h = jnp.square(jax.nn.relu(linear(xk, p["cm_k"])))
+    if pin_fn is not None:
+        h = pin_fn(h)
     return linear(h, p["cm_v"]), x[:, -1]
 
 
@@ -112,7 +126,8 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, **_):
             x = _shd.pin_batch(x, cfg)
         h, _, _ = _time_mix(p, rmsnorm(x, p["ln_tm"], cfg.norm_eps), cfg)
         x = x + h
-        h, _ = _channel_mix(p, rmsnorm(x, p["ln_cm"], cfg.norm_eps))
+        h, _ = _channel_mix(p, rmsnorm(x, p["ln_cm"], cfg.norm_eps),
+                            pin_fn=_pin(cfg) if cfg.parallel.exact_tp else None)
         return x + h, jnp.zeros((), jnp.float32)
 
     if cfg.parallel.remat != "none":
@@ -145,7 +160,10 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig):
         h, new_wkv, last_tm = _time_mix(
             p, rmsnorm(x, p["ln_tm"], cfg.norm_eps), cfg, state=wkv, x_prev=x_tm)
         x = x + h
-        h, last_cm = _channel_mix(p, rmsnorm(x, p["ln_cm"], cfg.norm_eps), x_prev=x_cm)
+        h, last_cm = _channel_mix(p, rmsnorm(x, p["ln_cm"], cfg.norm_eps),
+                                  x_prev=x_cm,
+                                  pin_fn=_pin(cfg) if cfg.parallel.exact_tp
+                                  else None)
         return x + h, (new_wkv, last_tm, last_cm)
 
     x, (wkv, x_tm, x_cm) = jax.lax.scan(

@@ -20,9 +20,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed import sharding as _shd
 from repro.kernels import ops
 from repro.models import layers as L
 from repro.models import moe as moe_mod
+
+
+def _pin(cfg: ModelConfig):
+    """Serve-TP exactness hook for down-projection inputs (no-op unless
+    cfg.parallel.exact_tp and a mesh is ambient — see shd.pin_tp_exact)."""
+    if not cfg.parallel.exact_tp:
+        return None
+    return lambda a: _shd.pin_tp_exact(a, cfg)
 
 
 def group_layout(cfg: ModelConfig) -> Tuple[int, int]:
@@ -98,13 +107,14 @@ def _block_apply(p, x, spec, cfg: ModelConfig, positions):
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.resolved_head_dim, positions=positions,
         rope_theta=cfg.rope_theta, window=spec.window, softcap=cfg.softcap,
-        use_pallas=cfg.use_pallas)
+        use_pallas=cfg.use_pallas, pin_fn=_pin(cfg))
     x = x + h
     y = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
     if cfg.moe:
         out, aux = moe_mod.moe_apply(p["moe"], y, cfg.moe)
     else:
-        out, aux = L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"]), 0.0
+        out, aux = L.swiglu(y, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"],
+                            pin_fn=_pin(cfg)), 0.0
     return x + out, aux
 
 
@@ -114,7 +124,7 @@ def _cross_apply(p, x, cross_kv, cfg: ModelConfig):
         p["attn"], L.rmsnorm(x, p["ln"], cfg.norm_eps),
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads, head_dim=hd,
         positions=jnp.zeros((1,), jnp.int32), rope_theta=cfg.rope_theta,
-        kv=cross_kv, use_pallas=cfg.use_pallas)
+        kv=cross_kv, use_pallas=cfg.use_pallas, pin_fn=_pin(cfg))
     return x + jnp.tanh(p["gate"]).astype(x.dtype) * h
 
 
@@ -201,12 +211,16 @@ def _block_tail(pj, x, o, cfg: ModelConfig):
     FFN (dense or MoE), both residual adds.  o: (B, H, T, hd)."""
     B, T = x.shape[:2]
     o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.num_heads * cfg.resolved_head_dim)
+    pin = _pin(cfg)
+    if pin is not None:
+        o = pin(o)
     x = x + L.linear(o, pj["attn"]["wo"])
     y = L.rmsnorm(x, pj["ln_mlp"], cfg.norm_eps)
     if cfg.moe:
         out, _ = moe_mod.moe_apply(pj["moe"], y, cfg.moe)
     else:
-        out = L.swiglu(y, pj["mlp"]["w1"], pj["mlp"]["w3"], pj["mlp"]["w2"])
+        out = L.swiglu(y, pj["mlp"]["w1"], pj["mlp"]["w3"], pj["mlp"]["w2"],
+                       pin_fn=pin)
     return x + out
 
 
@@ -455,7 +469,9 @@ def paged_decode_step(params, cache, table, tokens: jnp.ndarray,
                 vc = L.paged_cache_write(vc, v, table, pos, write)
                 o = ops.paged_decode_attention(
                     q, kc, vc, table, pos + 1, window=spec.window,
-                    softcap=cfg.softcap, use_pallas=cfg.use_pallas)
+                    softcap=cfg.softcap, use_pallas=cfg.use_pallas,
+                    model_axis=cfg.parallel.model_axis,
+                    batch_axes=cfg.parallel.batch_axes)
             else:
                 # ring buffer (window < max_len): dense path, frozen where
                 # the slot is inactive

@@ -1,0 +1,82 @@
+"""The serve-discipline registry: ONE list every consumer derives from.
+
+``serve_bench.py`` replays a request trace through each discipline and
+gates it; ``benchmarks/tables.py`` enumerates them in the CSV report; the
+README's discipline table is generated from here (``python -m
+repro.serve.disciplines`` prints the markdown; a tier-1 test pins the
+README copy to it).  Adding a discipline means adding ONE entry — a bench
+or doc that forgets it fails the registry cross-checks instead of silently
+drifting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class Discipline:
+    name: str          # registry key; also the serve_bench report section
+    title: str         # one-line README description
+    gate: str          # the headline gate serve_bench enforces
+
+
+DISCIPLINES: Tuple[Discipline, ...] = (
+    Discipline(
+        "sequential",
+        "one request at a time, fused prefill + one-dispatch decode loop",
+        "baseline (the other disciplines gate against it)"),
+    Discipline(
+        "continuous",
+        "slot-based continuous batching over a dense `(max_slots, …)` cache",
+        "requests/s >= 2x sequential; zero steady-state recompiles"),
+    Discipline(
+        "paged_gather",
+        "shared page pool; decode gathers the dense view through the page "
+        "table (reference/oracle)",
+        "token identity; nonzero dense-view transient (the copy it models)"),
+    Discipline(
+        "paged",
+        "gather-free: attention walks `pool[table]` page-block-wise "
+        "(flash-decode Pallas kernel + jnp oracle), zero dense-view "
+        "transient",
+        ">= 2x dense memory saving; >= gather tokens/s; zero transient "
+        "bytes"),
+    Discipline(
+        "prefix",
+        "`paged` + shared-prefix KV reuse: ref-counted CoW pages behind a "
+        "radix block-hash index; shared prompt prefixes are mapped, not "
+        "re-prefilled",
+        "token identity; prefill tokens/s uplift >= 1.3x at >= 50% "
+        "overlap; fewer pages stored"),
+    Discipline(
+        "overload",
+        "open-loop arrivals at 2x the service rate with priorities, "
+        "deadlines and SLA preemption",
+        "high-priority p95 TTFT <= 1.5x unloaded; cancel frees pages in "
+        "one iteration"),
+    Discipline(
+        "tp",
+        "tensor-parallel serving (DESIGN.md §11): the same persistent "
+        "decode step over a `(\"data\",\"model\")` mesh — float params "
+        "column-cut with all-gathers before down-projections (bitwise "
+        "token identity; quantized split-brain keeps the full Megatron "
+        "cut, int32-exact), page pool cut on KV heads, page tables "
+        "host-owned and replicated",
+        "token identity tp=2 vs tp=1; per-shard traffic sums byte-exactly; "
+        "decode tokens/s >= 1.6x on >= 2 cores"),
+)
+
+NAMES: Tuple[str, ...] = tuple(d.name for d in DISCIPLINES)
+
+
+def markdown_table() -> str:
+    """The README's discipline table, generated (do not hand-edit the
+    README copy — regenerate with ``python -m repro.serve.disciplines``)."""
+    lines = ["| discipline | what it is |", "|---|---|"]
+    lines += [f"| `{d.name}` | {d.title} |" for d in DISCIPLINES]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -49,9 +49,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.splitbrain import TrafficMeter, TrafficModel
+from repro.distributed import sharding as shd
 from repro.launch.mesh import make_test_mesh
 from repro.models import api
 from repro.serve import pages as pages_mod
@@ -65,9 +67,25 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                  fused: bool = True, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  paged_attn: str = "inplace", prefix_cache: str = "off"):
+        # Serve programs trace with exact_tp: every down-projection input is
+        # gathered before its contraction (shd.pin_tp_exact), so the sharded
+        # step is BITWISE identical to single-device greedy — the serve
+        # token-identity contract (DESIGN.md §11).  No-op on a 1-device mesh.
+        cfg = dataclasses.replace(
+            cfg, parallel=dataclasses.replace(cfg.parallel, exact_tp=True))
         self.cfg = cfg
-        self.params = params
         self.mesh = mesh if mesh is not None else make_test_mesh()
+        # tensor-parallel degree of the serving mesh (DESIGN.md §11): the
+        # stacked params shard COLUMN-only (serve_param_pspecs — row cuts
+        # would split contraction sums and break bf16 token identity) and
+        # the slot KV state cuts on heads.  tp == 1 (the 1-device test
+        # mesh) reproduces the single-device layout exactly.
+        self._tp = (int(self.mesh.shape[cfg.parallel.model_axis])
+                    if cfg.parallel.model_axis in self.mesh.axis_names else 1)
+        self._param_sh = shd.with_sharding(
+            self.mesh, shd.serve_param_pspecs(params, cfg, self.mesh))
+        with self.mesh:
+            self.params = jax.device_put(params, self._param_sh)
         self.max_len = max_len
         self.fused = fused
         self.meter = TrafficMeter()
@@ -106,7 +124,9 @@ class ServeEngine(pages_mod.PagedEngineMixin):
     def _get_serve_step(self, cache):
         if self._serve_step is None:
             self._serve_step = step_mod.make_serve_step(
-                self.cfg, self.mesh, self.params, cache, donate=False)
+                self.cfg, self.mesh, self.params, cache, donate=False,
+                param_spec_fn=shd.serve_param_pspecs,
+                cache_spec_fn=shd.serve_cache_pspecs)
         return self._serve_step
 
     def _get_prefill(self, cache, width: int):
@@ -114,14 +134,42 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         One entry per bucket -> O(log max_len) compiles total."""
         if width not in self._prefill_jit:
             self._prefill_jit[width] = step_mod.make_bucketed_prefill(
-                self.cfg, self.mesh, self.params, cache)
+                self.cfg, self.mesh, self.params, cache,
+                cache_spec_fn=shd.serve_cache_pspecs,
+                param_spec_fn=shd.serve_param_pspecs)
         return self._prefill_jit[width]
+
+    # ------------------------------------------------- TP serving placements
+    def _cache_shardings(self, tree_like):
+        """NamedSharding pytree for a dense cache under the serve rules
+        (head-cut KV; identical to replicated on a 1-device mesh)."""
+        return shd.with_sharding(
+            self.mesh,
+            shd.serve_cache_pspecs(tree_like, self._ragged_cfg, self.mesh))
+
+    def _b1_shardings(self):
+        if self._b1_sh is None:
+            if self._b1_shape is None:
+                self._b1_shape = jax.eval_shape(
+                    lambda: api.init_cache(self.cfg, 1, self.max_len))
+            self._b1_sh = self._cache_shardings(self._b1_shape)
+        return self._b1_sh
+
+    def _vec_shardings(self, n: int) -> NamedSharding:
+        """Placement of a per-slot (n,) vector (tokens / active mask)."""
+        ax = shd.MeshAxes(self.mesh, self.cfg)
+        b = ax.resolve("batch")
+        if b is None or n % ax.size(b) != 0:
+            return NamedSharding(self.mesh, P())
+        return NamedSharding(self.mesh, P(b))
 
     def _get_decode_loop(self, cache, steps: int, eos_id: Optional[int]):
         key = (steps, eos_id)
         if key not in self._loop_jit:
             self._loop_jit[key] = step_mod.make_decode_loop(
-                self.cfg, self.mesh, self.params, cache, steps, eos_id=eos_id)
+                self.cfg, self.mesh, self.params, cache, steps, eos_id=eos_id,
+                param_spec_fn=shd.serve_param_pspecs,
+                cache_spec_fn=shd.serve_cache_pspecs)
         return self._loop_jit[key]
 
     def jit_cache_sizes(self) -> Dict[str, int]:
@@ -134,22 +182,47 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         }
 
     # ----------------------------------------------------- traffic accounting
+    @property
+    def traffic_shards(self) -> int:
+        """How many ways the boundary-traffic accounting splits per token.
+
+        Equals the mesh's TP degree when every counted channel width
+        (d_model, kv_dim, vocab) divides exactly — each shard then crosses
+        ``full/tp`` bytes and the per-shard entries sum to the single-device
+        analytical model TO THE BYTE (DESIGN.md §11).  Any indivisible
+        width falls back to 1 (single aggregate entry), because an
+        approximate split would break the exactness contract."""
+        tp, tm = self._tp, self._traffic
+        if (tp > 1 and tm.d_model % tp == 0 and tm.kv_dim % tp == 0
+                and tm.vocab_size % tp == 0):
+            return tp
+        return 1
+
     def meter_tokens(self, n: int) -> None:
         """Replay ``n`` active tokens' boundary crossings on the meter.
 
         Aggregate form of the split-brain per-token log (same names, same
         eq. 7-10 widths, bytes == n * TrafficModel.bytes_per_token()); the
         accounting rule for masked decode is that ONLY active slots cross
-        the interface (DESIGN.md §4).
+        the interface (DESIGN.md §4).  On a TP mesh the replay logs ONE
+        entry per model shard at ``width/tp`` (``traffic_shards``): the
+        host scatters each shard its input slice and collects its KV/logit
+        slice, so boundary bytes do not duplicate across shards and the
+        totals — hence every exactness assertion — are unchanged.
         """
         n = int(n)
         if n <= 0:
             return
         tm = self._traffic
-        self.meter.h2d("x_qkv_in", (n, tm.num_layers, tm.d_model))
-        self.meter.d2h("kv_out", (n, tm.num_layers, 2, tm.kv_dim))
-        self.meter.h2d("attn_in", (n, tm.num_layers, tm.d_model))
-        self.meter.d2h("logits", (n, tm.vocab_size))
+        shards = self.traffic_shards
+        for _ in range(shards):
+            self.meter.h2d("x_qkv_in", (n, tm.num_layers,
+                                        tm.d_model // shards))
+            self.meter.d2h("kv_out", (n, tm.num_layers, 2,
+                                      tm.kv_dim // shards))
+            self.meter.h2d("attn_in", (n, tm.num_layers,
+                                       tm.d_model // shards))
+            self.meter.d2h("logits", (n, tm.vocab_size // shards))
 
     def measured_bytes(self, count_q: bool = False) -> Dict[str, int]:
         """Total metered boundary bytes (paper accounting: K/V + attention +
@@ -306,15 +379,16 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 "slot-servable)")
         shape = jax.eval_shape(
             lambda: api.init_cache(self.cfg, n_slots, self.max_len))
-        self._note_slot_cache(n_slots, shape, self._slot_axes(),
-                              self._slot_seq_axes())
+        ba, sa = self._slot_axes(), self._slot_seq_axes()
+        self._note_slot_cache(n_slots, shape, ba, sa)
         if not self.will_page():
             # recurrent/ring-only families have nothing that scales with
             # max_len: the page table is a no-op and the dense layout IS
             # the occupancy-proportional one — skip pool bookkeeping.
             self._paging_active = False
             with self.mesh:
-                return api.init_cache(self.cfg, n_slots, self.max_len)
+                cache = api.init_cache(self.cfg, n_slots, self.max_len)
+                return jax.device_put(cache, self._cache_shardings(shape))
         if (self._paged_attn == "inplace"
                 and self.cfg.parallel.decode_attn == "shard_map"):
             # ops.paged_decode_attention has no seq-sharded (dist_axis)
@@ -329,11 +403,27 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 "paged_attn='gather' or the dense slot cache")
         self._paging_active = True
         pool = self._pager.reset(n_slots)
+        # head-cut pool placement (DESIGN.md §11): each model shard owns a
+        # (num_pages, ps, Hkv/tp, hd) slice; the rules auto-replicate any
+        # leaf whose Hkv the TP degree does not divide (the Hkv < tp
+        # fallback), in which case the per-shard byte accounting stays 1-way
+        pshape = pages_mod.pool_shape(shape, ba, sa, pool.num_pages,
+                                      self.page_size)
+        pool_specs = shd.pool_pspecs(pshape, self._ragged_cfg, self.mesh, sa)
+        self._pool_sh = shd.with_sharding(self.mesh, pool_specs)
+        self._b1_sh = None
+        self._b1_shardings()
+        self._note_slot_cache(n_slots, shape, ba, sa,
+                              self._kv_cut(pool_specs, sa))
         self._pager.prefix_on = self.prefix_sharing_active()
         with self.mesh:
-            return pages_mod.make_pool(shape, self._slot_axes(),
-                                       self._slot_seq_axes(),
-                                       pool.num_pages, self.page_size)
+            return pages_mod.make_pool(shape, ba, sa, pool.num_pages,
+                                       self.page_size,
+                                       shardings=self._pool_sh)
+
+    def _kv_cut(self, pool_specs, sa) -> int:
+        return shd.pool_kv_cut(pool_specs, sa, self._tp,
+                               self.cfg.parallel.model_axis)
 
     # reserve_slot / can_ever_admit / free_slot / cache_stats come from
     # pages_mod.PagedEngineMixin (dense engines admit everything, no-ops).
@@ -367,7 +457,8 @@ class ServeEngine(pages_mod.PagedEngineMixin):
     def new_request_cache(self):
         """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
         with self.mesh:
-            return api.init_cache(self.cfg, 1, self.max_len)
+            cache = api.init_cache(self.cfg, 1, self.max_len)
+            return jax.device_put(cache, self._b1_shardings())
 
     def seed_request_cache(self, cache, slot: int, cached_len: int):
         """Prefix-aware prefill entry: B=1 request cache seeded with the
@@ -399,7 +490,11 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 return api.prefill_chunk(params, cache, tokens, true_len,
                                          self.cfg, block=block)
 
-            self._chunk_jit[W] = jax.jit(chunk_fn, donate_argnums=(1,))
+            b1_sh = self._b1_shardings()
+            self._chunk_jit[W] = jax.jit(
+                chunk_fn, donate_argnums=(1,),
+                in_shardings=(self._param_sh, b1_sh, None, None),
+                out_shardings=b1_sh)
         with self.mesh:
             return self._chunk_jit[W](self.params, cache, chunk[None, :],
                                       jnp.int32(true_w))
@@ -417,7 +512,12 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                                          self._slot_axes(),
                                          self._slot_seq_axes(), n_tok)
         if self._slot_insert is None:
-            self._slot_insert = slots_mod.make_slot_insert(self._slot_axes())
+            self._slot_insert = slots_mod.make_slot_insert(
+                self._slot_axes(),
+                batched_sh=self._cache_shardings(jax.eval_shape(
+                    lambda: api.init_cache(self.cfg, self._slot_count,
+                                           self.max_len))),
+                single_sh=self._b1_shardings())
         with self.mesh:
             return self._slot_insert(batched_cache, slot_cache,
                                      jnp.int32(slot))
@@ -464,7 +564,17 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                             pcache, new, table, pos, act_m, ba, sa)
                         return nxt, pc
 
-                self._paged_step = jax.jit(paged_step, donate_argnums=(1,))
+                # explicit placements: pool head-cut, page table replicated
+                # (host-owned), per-slot vectors on the batch axis — the
+                # sharded jit cache stays keyed on ONE layout, so the
+                # steady state never recompiles on a TP mesh either
+                vec = self._vec_shardings(n)
+                repl = NamedSharding(self.mesh, P())
+                self._paged_step = jax.jit(
+                    paged_step, donate_argnums=(1,),
+                    in_shardings=(self._param_sh, self._pool_sh, repl,
+                                  vec, vec),
+                    out_shardings=(vec, self._pool_sh))
             with self.mesh:
                 out = self._paged_step(self.params, cache,
                                        self._pager.table(),
@@ -476,7 +586,8 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         if n not in self._slot_step_jit:
             self._slot_step_jit[n] = step_mod.make_slot_step(
                 self._ragged_cfg, self.mesh, self.params, cache,
-                self._slot_axes())
+                self._slot_axes(), cache_spec_fn=shd.serve_cache_pspecs,
+                param_spec_fn=shd.serve_param_pspecs)
         with self.mesh:
             return self._slot_step_jit[n](
                 self.params, cache, jnp.asarray(tokens, jnp.int32),

@@ -93,6 +93,7 @@ __all__ = [
     "round_len",
     "seq_axes",
     "page_axis",
+    "pool_shape",
     "make_pool",
     "gather_view",
     "gather_tree",
@@ -659,7 +660,14 @@ class PagedEngineMixin:
     _seed_jit = None
     _cow_jit = None
     _kv_tok_bytes: int = 0       # per-token-per-slot seq-scaling cache bytes
+    _kv_shards: int = 1          # TP head cut of the pool (1 = replicated)
     _slot_count: int = 0
+    # TP serving mesh placements (None = single-device / unspecified): the
+    # engine's ``init_slot_cache`` fills these with NamedSharding pytrees so
+    # every mixin jit pins its pool/request-cache layout explicitly — the
+    # sharded jit caches stay stable (zero steady-state recompiles).
+    _pool_sh = None              # paged slot-cache placement pytree
+    _b1_sh = None                # B=1 request-cache placement pytree
 
     def _stats_seq_axes(self):
         raise NotImplementedError
@@ -689,16 +697,26 @@ class PagedEngineMixin:
         return prefix_cache == "on"
 
     def _note_slot_cache(self, n_slots: int, cache_shape: Any, ba: Any,
-                         sa: Any) -> None:
+                         sa: Any, kv_shards: int = 1) -> None:
         """Record the slot-cache geometry the KV-read accounting needs
         (called by both engines' ``init_slot_cache``, every layout), and
         decide prefix shareability: reuse is sound only when every dynamic
         cache leaf pages — a leaf that batch-indexes but does NOT page
         (ring K/V, recurrent state) is slot-private state a shared page
         cannot restore, so its presence demotes the prefix index to a
-        no-op (``len`` is exempt: the seed program sets it directly)."""
+        no-op (``len`` is exempt: the seed program sets it directly).
+
+        ``kv_shards`` is the TP head cut of the KV state (DESIGN.md §11):
+        the aggregate read model is unchanged (``_kv_tok_bytes`` stays the
+        full-model figure so every gate and exactness assertion holds
+        verbatim), but per-shard accounting —
+        ``kv_token_bytes(..., kv_shards)`` × shards == full — is exposed
+        through :meth:`cache_stats`."""
         self._slot_count = int(n_slots)
         self._kv_tok_bytes = kv_token_bytes(cache_shape, ba, sa)
+        self._kv_shards = int(kv_shards)
+        if self._kv_shards > 1:     # validates exact divisibility
+            kv_token_bytes(cache_shape, ba, sa, self._kv_shards)
         leaves = jax.tree_util.tree_flatten_with_path(sa)[0]
         self._prefix_shareable = all(
             ax >= 0 or _is_len_path(path) for path, ax in leaves)
@@ -757,7 +775,13 @@ class PagedEngineMixin:
             def insert(pcache, single, row, s):
                 return insert_tree(pcache, single, row, s, ba, sa)
 
-            self._paged_insert_jit = jax.jit(insert, donate_argnums=(0,))
+            kw = {}
+            if self._pool_sh is not None:
+                kw = dict(in_shardings=(self._pool_sh, self._b1_sh,
+                                        None, None),
+                          out_shardings=self._pool_sh)
+            self._paged_insert_jit = jax.jit(insert, donate_argnums=(0,),
+                                             **kw)
         return self._paged_insert_jit(batched_cache, single_cache,
                                       self._pager.insert_row(slot),
                                       jnp.int32(slot))
@@ -826,7 +850,11 @@ class PagedEngineMixin:
                 return jax.tree_util.tree_map_with_path(
                     leaf, b1_shape, ba, sa, pcache)
 
-            self._seed_jit = jax.jit(seed)
+            kw = {}
+            if self._pool_sh is not None:
+                kw = dict(in_shardings=(self._pool_sh, None, None),
+                          out_shardings=self._b1_sh)
+            self._seed_jit = jax.jit(seed, **kw)
         return self._seed_jit(batched_cache, self._pager.row(slot),
                               jnp.int32(cached_len))
 
@@ -848,7 +876,11 @@ class PagedEngineMixin:
 
                 return jax.tree.map(leaf, pcache, ba, sa)
 
-            self._cow_jit = jax.jit(copy, donate_argnums=(0,))
+            kw = {}
+            if self._pool_sh is not None:
+                kw = dict(in_shardings=(self._pool_sh, None, None),
+                          out_shardings=self._pool_sh)
+            self._cow_jit = jax.jit(copy, donate_argnums=(0,), **kw)
         page_bytes = self._kv_tok_bytes * self._pager.page_size
         for src, dst in copies:
             cache = self._cow_jit(cache, jnp.int32(src), jnp.int32(dst))
@@ -903,7 +935,11 @@ class PagedEngineMixin:
         if not self._paging_active:
             total = sum(int(a.nbytes) for a in jax.tree.leaves(cache))
             return {"cache_bytes": total, "peak_kv_bytes_in_use": total}
-        return self._pager.stats(cache, self._stats_seq_axes())
+        stats = self._pager.stats(cache, self._stats_seq_axes())
+        stats["kv_shards"] = self._kv_shards
+        stats["kv_token_bytes_per_shard"] = (
+            self._kv_tok_bytes // self._kv_shards)
+        return stats
 
 
 # ----------------------------------------------------------------------------
@@ -951,20 +987,36 @@ def _pages_restore(pool: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
     return jnp.moveaxis(pool, (0, 1), (pax, pax + 1))
 
 
-def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
-              page_size: int) -> Any:
-    """Allocate the paged slot cache: pool layout for paging leaves, dense
-    ``(max_slots, ...)`` zeros for everything else.  Same pytree structure
-    as the dense cache, so engines keep one cache object either way."""
+def pool_shape(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
+               page_size: int) -> Any:
+    """ShapeDtypeStruct pytree of the paged slot cache (``make_pool``
+    without the allocation) — what the sharding rules and eval_shape-based
+    plumbing consume."""
     def leaf(a, b_ax, s_ax):
         if s_ax < 0:
-            return jnp.zeros(a.shape, a.dtype)
+            return jax.ShapeDtypeStruct(a.shape, a.dtype)
         rest = tuple(d for i, d in enumerate(a.shape) if i not in (b_ax, s_ax))
         pax = page_axis(b_ax, s_ax)
-        return jnp.zeros(rest[:pax] + (num_pages, page_size) + rest[pax:],
-                         a.dtype)
+        return jax.ShapeDtypeStruct(
+            rest[:pax] + (num_pages, page_size) + rest[pax:], a.dtype)
 
     return jax.tree.map(leaf, cache_shape, ba, sa)
+
+
+def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
+              page_size: int, shardings: Any = None) -> Any:
+    """Allocate the paged slot cache: pool layout for paging leaves, dense
+    ``(max_slots, ...)`` zeros for everything else.  Same pytree structure
+    as the dense cache, so engines keep one cache object either way.
+
+    ``shardings`` (optional) is a matching pytree of ``jax.sharding``
+    placements — the TP serving mesh allocates each pool leaf directly in
+    its head-cut layout, so no full replica ever materializes."""
+    shapes = pool_shape(cache_shape, ba, sa, num_pages, page_size)
+    if shardings is None:
+        return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), shapes)
+    return jax.tree.map(lambda a, sh: jnp.zeros(a.shape, a.dtype, device=sh),
+                        shapes, shardings)
 
 
 def pool_bytes(pcache: Any, sa: Any) -> int:
@@ -981,11 +1033,19 @@ def page_token_bytes(pcache: Any, sa: Any, num_pages: int,
     return pool_bytes(pcache, sa) // (int(num_pages) * int(page_size))
 
 
-def kv_token_bytes(cache_shape: Any, ba: Any, sa: Any) -> int:
+def kv_token_bytes(cache_shape: Any, ba: Any, sa: Any,
+                   kv_shards: int = 1) -> int:
     """Per-token-per-slot bytes of the sequence-scaling cache leaves, from
     the DENSE cache shapes (paged or not: the same KV bytes per token).
     The denominator of the live-page read accounting (TrafficMeter
-    ``host_read``) and of the gather-transient metric in serve_bench."""
+    ``host_read``) and of the gather-transient metric in serve_bench.
+
+    ``kv_shards`` > 1 returns the PER-SHARD bytes of the head-cut TP pool
+    (DESIGN.md §11): each model shard owns ``Hkv/kv_shards`` of every KV
+    leaf, so per-shard bytes are exactly ``full/kv_shards`` — summed over
+    the shards they reproduce the single-device accounting to the byte.
+    The shard count must divide the total (callers pass 1 when any leaf's
+    head dim is indivisible — the replication fallback)."""
     def per_tok(a, b_ax, s_ax):
         if s_ax < 0:
             return 0
@@ -993,7 +1053,16 @@ def kv_token_bytes(cache_shape: Any, ba: Any, sa: Any) -> int:
         return n * jnp.dtype(a.dtype).itemsize
 
     sizes = jax.tree.map(per_tok, cache_shape, ba, sa)
-    return sum(jax.tree.leaves(sizes))
+    total = sum(jax.tree.leaves(sizes))
+    kv_shards = int(kv_shards)
+    if kv_shards > 1:
+        if total % kv_shards != 0:
+            raise ValueError(
+                f"kv_token_bytes ({total}) not divisible by kv_shards "
+                f"({kv_shards}) — per-shard accounting would not sum "
+                f"exactly; use kv_shards=1 (replicated fallback)")
+        return total // kv_shards
+    return total
 
 
 # ----------------------------------------------------------------------------

@@ -74,13 +74,19 @@ def select_slots(active: jnp.ndarray, new: Any, old: Any, axes: Any) -> Any:
         new, old, axes)
 
 
-def make_slot_insert(axes: Any):
+def make_slot_insert(axes: Any, batched_sh: Any = None,
+                     single_sh: Any = None):
     """Jitted ``insert(batched_cache, single_cache, slot) -> batched_cache``.
 
     Writes every leaf of a batch-1 cache into position ``slot`` of the
     batched cache along the leaf's batch axis.  ``slot`` is a traced scalar,
     so admission into any slot reuses ONE compiled program; the batched
     buffers are donated (admission is in-place on the accelerator).
+
+    ``batched_sh``/``single_sh`` (optional) pin the slot-cache and request-
+    cache placements on a TP serving mesh (NamedSharding pytrees) — explicit
+    in/out specs keep the compiled-program cache stable when admission
+    interleaves with sharded decode (DESIGN.md §11).
     """
     def insert(batched, single, slot):
         return jax.tree.map(
@@ -88,7 +94,11 @@ def make_slot_insert(axes: Any):
                 b, s.astype(b.dtype), slot, axis=ax),
             batched, single, axes)
 
-    return jax.jit(insert, donate_argnums=(0,))
+    kw = {}
+    if batched_sh is not None:
+        kw = dict(in_shardings=(batched_sh, single_sh, None),
+                  out_shardings=batched_sh)
+    return jax.jit(insert, donate_argnums=(0,), **kw)
 
 
 class CompileCounter:

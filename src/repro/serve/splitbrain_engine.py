@@ -37,10 +37,13 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.splitbrain import TrafficMeter, TrafficModel
+from repro.distributed import sharding as shd
 from repro.kernels import ops
+from repro.launch.mesh import make_test_mesh
 from repro.models import api
 from repro.models import layers as L
 from repro.serve import pages as pages_mod
@@ -63,7 +66,8 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                  quantize: bool = True, jit: bool = True,
                  use_pallas: bool = False, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 paged_attn: str = "inplace", prefix_cache: str = "off"):
+                 paged_attn: str = "inplace", prefix_cache: str = "off",
+                 mesh=None):
         if cfg.family != "lm" or len(cfg.layer_pattern) != 1:
             raise ValueError(
                 "split-brain reference engine covers the paper's LM configs")
@@ -71,6 +75,11 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
             raise ValueError(
                 "split-brain reference engine covers dense FFNs")
         self.cfg = cfg
+        self.mesh = mesh if mesh is not None else make_test_mesh()
+        # tensor-parallel degree of the serving mesh (DESIGN.md §11); tp == 1
+        # (the 1-device test mesh) reproduces the single-device layout.
+        self._tp = (int(self.mesh.shape[cfg.parallel.model_axis])
+                    if cfg.parallel.model_axis in self.mesh.axis_names else 1)
         self.meter = TrafficMeter()
         # The "synthesis" step: weights become immutable INT4 codes.
         self.device_params = (api.quantize_model(params, cfg)
@@ -100,6 +109,19 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
             "ln_final": self.host_params["ln_final"],
             "head": self.device_params.get("lm_head"),
         }
+        # TP placement of the stacked weights: the Megatron column/row rules
+        # match the stacked (L, ...) projections through their leading-dim
+        # padding, "head" takes the lm_head column cut (DESIGN.md §11).
+        # Quantized weights keep the FULL row+column cut — int32 matmul
+        # accumulation is associative, so split contractions stay bitwise
+        # exact.  Float weights (quantize=False) must fall back to the
+        # column-only serve rules to preserve greedy token identity.
+        spec_fn = shd.param_pspecs if quantize else shd.serve_param_pspecs
+        self._param_sh = shd.with_sharding(
+            self.mesh, spec_fn(self._weights, cfg, self.mesh))
+        with self.mesh:
+            self._weights = jax.device_put(self._weights, self._param_sh)
+        self._cache_sh: Dict[int, Any] = {}      # keyed by batch size
         # Pre-computed per-token boundary-crossing byte counts (shapes are
         # static) for the trace-time meter replay; per batch element.
         self._decode_jit = jax.jit(self._token_step, donate_argnums=(1, 2))
@@ -149,19 +171,44 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         self.meter.d2h("logits", logits.shape)   # eq. 9
         return logits
 
+    @property
+    def traffic_shards(self) -> int:
+        """How many ways the boundary-traffic accounting splits per token.
+
+        Equals the mesh's TP degree when every counted channel width
+        (d_model, Hkv, Hq, vocab) divides exactly — each shard then crosses
+        ``full/tp`` bytes and the per-shard entries sum to the single-device
+        analytical model TO THE BYTE (DESIGN.md §11).  Any indivisible width
+        falls back to 1 (single aggregate entry)."""
+        cfg, tp = self.cfg, self._tp
+        if (tp > 1 and cfg.d_model % tp == 0 and cfg.num_kv_heads % tp == 0
+                and cfg.num_heads % tp == 0 and cfg.vocab_size % tp == 0):
+            return tp
+        return 1
+
     def _meter_token(self, batch: int) -> None:
         """Replay one token's boundary crossings on the meter.
 
         The jitted path cannot log from inside the trace, but every crossing
         shape is static, so this host-side replay is byte-identical (names,
-        order, and sizes) to the eager path's runtime log.
+        order, and sizes) to the eager path's runtime log.  On a TP mesh each
+        crossing is logged once per model shard at ``width/tp``
+        (``traffic_shards``): the host scatters each shard its activation
+        slice and collects its KV-head/logit slice, so boundary bytes never
+        duplicate across shards and every total — hence the eq. 7-10
+        exactness contract — is unchanged.
         """
         cfg = self.cfg
+        s = self.traffic_shards
         for _ in range(self._n_layers):
-            self.meter.h2d("x_qkv_in", (batch, 1, cfg.d_model))
-            self.meter.d2h("kv_out", (2, batch, cfg.num_kv_heads, 1, self._hd))
-            self.meter.h2d("attn_in", (batch, 1, cfg.num_heads * self._hd))
-        self.meter.d2h("logits", (batch, 1, cfg.vocab_size))
+            for _ in range(s):
+                self.meter.h2d("x_qkv_in", (batch, 1, cfg.d_model // s))
+                self.meter.d2h("kv_out", (2, batch, cfg.num_kv_heads // s,
+                                          1, self._hd))
+                self.meter.h2d("attn_in", (batch, 1,
+                                           cfg.num_heads * self._hd // s))
+        for _ in range(s):
+            self.meter.d2h("logits", (batch, 1, cfg.vocab_size // s))
 
     # --------------------------------------------------------- fused hot path
     def _layer_sweep(self, weights, k_cache, v_cache, pos, token, kv_attend):
@@ -246,9 +293,11 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         def kv_attend(kc, vc, q, k, v):
             kc = L.paged_cache_write(kc, k, table, pos, write)
             vc = L.paged_cache_write(vc, v, table, pos, write)
-            attn = ops.paged_decode_attention(q, kc, vc, table, pos + 1,
-                                              softcap=self.cfg.softcap,
-                                              use_pallas=self.use_pallas)
+            attn = ops.paged_decode_attention(
+                q, kc, vc, table, pos + 1, softcap=self.cfg.softcap,
+                use_pallas=self.use_pallas,
+                model_axis=self.cfg.parallel.model_axis,
+                batch_axes=self.cfg.parallel.batch_axes)
             return attn, kc, vc
 
         next_tok, logits, new_k, new_v = self._layer_sweep(
@@ -319,8 +368,9 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         if not self.jit:
             return self.decode_token_eager(cache, token)
         self._meter_token(token.shape[0])
-        next_tok, logits, k, v, length = self._decode_jit(
-            self._weights, cache["k"], cache["v"], cache["len"], token)
+        with self.mesh:
+            next_tok, logits, k, v, length = self._decode_jit(
+                self._weights, cache["k"], cache["v"], cache["len"], token)
         return next_tok, logits, {"k": k, "v": v, "len": length}
 
     def decode_token_eager(self, cache: Dict[str, Any], token: jnp.ndarray):
@@ -400,9 +450,10 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
             prompts = jnp.pad(prompts, ((0, 0), (0, Pb - T0)))
         cache = self.init_cache(B)
         t0 = time.perf_counter()
-        toks, k, v, length, n = self._generate_jit[key](
-            self._weights, cache["k"], cache["v"], cache["len"], prompts,
-            jnp.int32(T0), jnp.int32(T0 - 1 + max_new))
+        with self.mesh:
+            toks, k, v, length, n = self._generate_jit[key](
+                self._weights, cache["k"], cache["v"], cache["len"], prompts,
+                jnp.int32(T0), jnp.int32(T0 - 1 + max_new))
         toks = jax.block_until_ready(toks)
         dt = time.perf_counter() - t0
         toks = np.asarray(toks)[:, :max_new]
@@ -463,16 +514,43 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                 "gen_len": gen_len,
                 "tokens_per_s": int(gen_len.sum()) / dt, "decode_s": dt}
 
-    def init_cache(self, batch: int) -> Dict[str, Any]:
-        """Stacked KV cache: (L, B, Hkv, S, hd) — scan-sweepable, no lists."""
+    def _cache_like(self, batch: int) -> Dict[str, Any]:
+        """ShapeDtypeStruct pytree of the stacked (L, B, Hkv, S, hd) cache."""
         cfg = self.cfg
         shape = (cfg.num_layers, batch, cfg.num_kv_heads, self.max_len,
                  self._hd)
         return {
-            "k": jnp.zeros(shape, self._dtype),
-            "v": jnp.zeros(shape, self._dtype),
-            "len": jnp.zeros((batch,), jnp.int32),
+            "k": jax.ShapeDtypeStruct(shape, self._dtype),
+            "v": jax.ShapeDtypeStruct(shape, self._dtype),
+            "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
         }
+
+    def _cache_shardings(self, batch: int):
+        """NamedSharding pytree for the stacked cache under the serve rules
+        (head-cut KV; identical to replicated on a 1-device mesh)."""
+        if batch not in self._cache_sh:
+            self._cache_sh[batch] = shd.with_sharding(
+                self.mesh, shd.serve_cache_pspecs(
+                    self._cache_like(batch), self.cfg, self.mesh))
+        return self._cache_sh[batch]
+
+    def _vec_shardings(self, n: int) -> NamedSharding:
+        """Placement of a per-slot (n,) vector (tokens / active mask)."""
+        ax = shd.MeshAxes(self.mesh, self.cfg)
+        b = ax.resolve("batch")
+        if b is None or n % ax.size(b) != 0:
+            return NamedSharding(self.mesh, P())
+        return NamedSharding(self.mesh, P(b))
+
+    def init_cache(self, batch: int) -> Dict[str, Any]:
+        """Stacked KV cache: (L, B, Hkv, S, hd) — scan-sweepable, no lists.
+        Allocated directly into its TP placement (no full replica ever
+        materialises on a multi-device mesh)."""
+        like = self._cache_like(batch)
+        sh = self._cache_shardings(batch)
+        with self.mesh:
+            return jax.tree.map(
+                lambda a, s: jnp.zeros(a.shape, a.dtype, device=s), like, sh)
 
     # ---------------------------------------------------------- slot protocol
     # Consumed by serve/scheduler.py: the stacked cache doubles as a slot
@@ -483,15 +561,29 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
     _SEQ_AXES = {"k": 3, "v": 3, "len": -1}
 
     def init_slot_cache(self, n_slots: int) -> Dict[str, Any]:
-        shape = jax.eval_shape(lambda: self.init_cache(n_slots))
-        self._note_slot_cache(n_slots, shape, self._SLOT_AXES,
-                              self._SEQ_AXES)
+        shape = self._cache_like(n_slots)
+        ba, sa = self._SLOT_AXES, self._SEQ_AXES
+        self._note_slot_cache(n_slots, shape, ba, sa)
         if not self._paging_active:
             return self.init_cache(n_slots)
         pool = self._pager.reset(n_slots)
         self._pager.prefix_on = self.prefix_sharing_active()
-        return pages_mod.make_pool(shape, self._SLOT_AXES, self._SEQ_AXES,
-                                   pool.num_pages, self.page_size)
+        # head-cut pool placement (DESIGN.md §11): each model shard owns a
+        # (L, num_pages, ps, Hkv/tp, hd) slice; an Hkv the TP degree does
+        # not divide auto-replicates (the Hkv < tp fallback) and the
+        # per-shard byte accounting stays 1-way.
+        pshape = pages_mod.pool_shape(shape, ba, sa, pool.num_pages,
+                                      self.page_size)
+        pool_specs = shd.pool_pspecs(pshape, self.cfg, self.mesh, sa)
+        self._pool_sh = shd.with_sharding(self.mesh, pool_specs)
+        self._b1_sh = self._cache_shardings(1)
+        self._note_slot_cache(n_slots, shape, ba, sa,
+                              shd.pool_kv_cut(pool_specs, sa, self._tp,
+                                              self.cfg.parallel.model_axis))
+        with self.mesh:
+            return pages_mod.make_pool(shape, ba, sa, pool.num_pages,
+                                       self.page_size,
+                                       shardings=self._pool_sh)
 
     # reserve_slot / can_ever_admit / free_slot / cache_stats come from
     # pages_mod.PagedEngineMixin.
@@ -507,9 +599,10 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         slot's matched prefix pages gathered from the pool, ``len`` set to
         ``cached_len`` — the tail chunk stream continues from there."""
         if self._b1_shape is None:
-            self._b1_shape = jax.eval_shape(lambda: self.init_cache(1))
-        return self.paged_seed(cache, slot, cached_len, self._SLOT_AXES,
-                               self._SEQ_AXES, self._b1_shape)
+            self._b1_shape = self._cache_like(1)
+        with self.mesh:
+            return self.paged_seed(cache, slot, cached_len, self._SLOT_AXES,
+                                   self._SEQ_AXES, self._b1_shape)
 
     def prefill_chunk_slot(self, cache: Dict[str, Any], chunk: np.ndarray,
                            true_w: int) -> Dict[str, Any]:
@@ -525,9 +618,10 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         pages_mod.check_chunk_width(W, self.max_len)
         if W not in self._prefill_jit:
             self._prefill_jit[W] = self._prefill_fn(W)
-        k, v, ln = self._prefill_jit[W](
-            self._weights, cache["k"], cache["v"], cache["len"],
-            jnp.asarray(chunk[None, :]), jnp.int32(true_w))
+        with self.mesh:
+            k, v, ln = self._prefill_jit[W](
+                self._weights, cache["k"], cache["v"], cache["len"],
+                jnp.asarray(chunk[None, :]), jnp.int32(true_w))
         return {"k": k, "v": v, "len": ln}
 
     def _prefill_fn(self, width: int):
@@ -548,7 +642,12 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                                          jnp.arange(width))
             return k, v, ln
 
-        return jax.jit(prefill, donate_argnums=(1, 2))
+        b1 = self._cache_shardings(1)
+        return jax.jit(
+            prefill, donate_argnums=(1, 2),
+            in_shardings=(self._param_sh, b1["k"], b1["v"], b1["len"],
+                          None, None),
+            out_shardings=(b1["k"], b1["v"], b1["len"]))
 
     def prefill_slot(self, prompt: np.ndarray):
         """Prefill ONE request into a fresh B=1 cache (bucketed width).
@@ -565,9 +664,10 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                 self._prefill_jit[width] = self._prefill_fn(width)
             body = np.zeros((1, width), np.int32)
             body[0, :T0 - 1] = prompt[:-1]
-            k, v, ln = self._prefill_jit[width](
-                self._weights, cache["k"], cache["v"], cache["len"],
-                jnp.asarray(body), jnp.int32(T0 - 1))
+            with self.mesh:
+                k, v, ln = self._prefill_jit[width](
+                    self._weights, cache["k"], cache["v"], cache["len"],
+                    jnp.asarray(body), jnp.int32(T0 - 1))
             cache = {"k": k, "v": v, "len": ln}
         return cache, int(prompt[-1])
 
@@ -578,11 +678,18 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         B=1 K/V is scattered block-wise onto them."""
         if self._paging_active:
             n_tok = int(np.asarray(slot_cache["len"])[0])
-            return self.paged_insert(batched_cache, slot_cache, slot,
-                                     self._SLOT_AXES, self._SEQ_AXES, n_tok)
+            with self.mesh:
+                return self.paged_insert(batched_cache, slot_cache, slot,
+                                         self._SLOT_AXES, self._SEQ_AXES,
+                                         n_tok)
         if self._slot_insert is None:
-            self._slot_insert = slots_mod.make_slot_insert(self._SLOT_AXES)
-        return self._slot_insert(batched_cache, slot_cache, jnp.int32(slot))
+            self._slot_insert = slots_mod.make_slot_insert(
+                self._SLOT_AXES,
+                batched_sh=self._cache_shardings(self._slot_count),
+                single_sh=self._cache_shardings(1))
+        with self.mesh:
+            return self._slot_insert(batched_cache, slot_cache,
+                                     jnp.int32(slot))
 
     def decode_slots(self, cache: Dict[str, Any], tokens, active):
         """One masked batched split-brain token step: every slot computes,
@@ -594,10 +701,12 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         no dense-view transient), ``paged_attn="gather"`` keeps the
         reference discipline (gather K/V through the table, same token
         step, scatter one token back per active slot)."""
+        n = int(np.asarray(tokens).shape[0])
         if self._paging_active:
             act = np.asarray(active, bool)
-            cache = self.paged_pre_step(cache, act, self._SLOT_AXES,
-                                        self._SEQ_AXES)
+            with self.mesh:
+                cache = self.paged_pre_step(cache, act, self._SLOT_AXES,
+                                            self._SEQ_AXES)
             if self._paged_step is None:
                 ba, sa = self._SLOT_AXES, self._SEQ_AXES
 
@@ -619,10 +728,22 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                             pcache, new, table, pos, act_m, ba, sa)
                         return nxt, pc
 
-                self._paged_step = jax.jit(paged_step, donate_argnums=(1,))
-            nxt, pc = self._paged_step(
-                self._weights, cache, self._pager.table(),
-                jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
+                # explicit placements: pool head-cut, page table replicated
+                # (host-owned), per-slot vectors on the batch axis — the
+                # sharded jit cache stays keyed on ONE layout, so the
+                # steady state never recompiles on a TP mesh either
+                vec = self._vec_shardings(n)
+                repl = NamedSharding(self.mesh, P())
+                self._paged_step = jax.jit(
+                    paged_step, donate_argnums=(1,),
+                    in_shardings=(self._param_sh, self._pool_sh, repl,
+                                  vec, vec),
+                    out_shardings=(vec, self._pool_sh))
+            with self.mesh:
+                nxt, pc = self._paged_step(
+                    self._weights, cache, self._pager.table(),
+                    jnp.asarray(tokens, jnp.int32),
+                    jnp.asarray(active, bool))
             self._pager.post_decode(act)
             return nxt, pc
         self._meter_kv_read(np.asarray(active, bool))
@@ -633,10 +754,17 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                 return (nxt, jnp.where(m, k2, k), jnp.where(m, v2, v),
                         jnp.where(active, ln2, ln))
 
-            self._slot_step = jax.jit(slot_step, donate_argnums=(1, 2))
-        nxt, k, v, ln = self._slot_step(
-            self._weights, cache["k"], cache["v"], cache["len"],
-            jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
+            sh = self._cache_shardings(self._slot_count)
+            vec = self._vec_shardings(n)
+            self._slot_step = jax.jit(
+                slot_step, donate_argnums=(1, 2),
+                in_shardings=(self._param_sh, sh["k"], sh["v"], sh["len"],
+                              vec, vec),
+                out_shardings=(vec, sh["k"], sh["v"], sh["len"]))
+        with self.mesh:
+            nxt, k, v, ln = self._slot_step(
+                self._weights, cache["k"], cache["v"], cache["len"],
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
         return nxt, {"k": k, "v": v, "len": ln}
 
     def meter_tokens(self, n: int) -> None:

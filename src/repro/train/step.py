@@ -62,13 +62,20 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
 
 
 def make_bucketed_prefill(cfg: ModelConfig, mesh: Mesh, params_like,
-                          cache_like, donate: bool = True):
+                          cache_like, donate: bool = True,
+                          cache_spec_fn=shd.cache_pspecs,
+                          param_spec_fn=shd.param_pspecs):
     """Bucketed prompt->KV-cache fill: tokens are right-padded to a
     power-of-two width and ``true_len`` (a traced scalar) marks the real
     prompt length, so ONE compiled program serves every prompt length that
-    rounds up to the same bucket (api.prefill_bucketed)."""
-    p_specs = shd.param_pspecs(params_like, cfg, mesh)
-    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    rounds up to the same bucket (api.prefill_bucketed).
+
+    ``cache_spec_fn`` picks the cache partitioning rules: the default train
+    rules, or ``shd.serve_cache_pspecs`` for the TP serving mesh (head-cut
+    KV, DESIGN.md §11).  ``param_spec_fn`` likewise: float serving engines
+    pass ``shd.serve_param_pspecs`` (column-only TP, exact greedy tokens)."""
+    p_specs = param_spec_fn(params_like, cfg, mesh)
+    c_specs = cache_spec_fn(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
     def prefill_step(params, cache, tokens, true_len):
@@ -87,7 +94,8 @@ def make_bucketed_prefill(cfg: ModelConfig, mesh: Mesh, params_like,
 
 def make_decode_loop(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
                      steps: int, eos_id: Optional[int] = None,
-                     donate: bool = True):
+                     donate: bool = True, param_spec_fn=shd.param_pspecs,
+                     cache_spec_fn=shd.cache_pspecs):
     """``steps`` greedy decode iterations fused into ONE dispatch.
 
     The whole multi-token loop is a jitted ``lax.scan`` over decode_step —
@@ -102,8 +110,8 @@ def make_decode_loop(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
     scan body identical for all batch members.  Without ``eos_id``,
     gen_len == steps and the tokens match the pre-EOS behaviour exactly.
     """
-    p_specs = shd.param_pspecs(params_like, cfg, mesh)
-    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    p_specs = param_spec_fn(params_like, cfg, mesh)
+    c_specs = cache_spec_fn(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
     def decode_loop(params, cache, tokens):
@@ -139,7 +147,9 @@ def make_decode_loop(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
 
 
 def make_slot_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
-                   axes, donate: bool = True):
+                   axes, donate: bool = True,
+                   cache_spec_fn=shd.cache_pspecs,
+                   param_spec_fn=shd.param_pspecs):
     """Masked batched decode step for continuous batching.
 
     One greedy token for EVERY slot of the fixed-size slot cache, but only
@@ -155,8 +165,8 @@ def make_slot_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
     assert not cfg.parallel.aligned_decode, \
         "slot decode needs ragged cache writes (aligned_decode=False)"
     from repro.serve import slots as slots_mod
-    p_specs = shd.param_pspecs(params_like, cfg, mesh)
-    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    p_specs = param_spec_fn(params_like, cfg, mesh)
+    c_specs = cache_spec_fn(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
     def slot_step(params, cache, tokens, active):
@@ -177,10 +187,11 @@ def make_slot_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
 
 
 def make_serve_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
-                    donate: bool = True):
+                    donate: bool = True, param_spec_fn=shd.param_pspecs,
+                    cache_spec_fn=shd.cache_pspecs):
     """One decode step (the paper's per-token loop) with sharded KV cache."""
-    p_specs = shd.param_pspecs(params_like, cfg, mesh)
-    c_specs = shd.cache_pspecs(cache_like, cfg, mesh)
+    p_specs = param_spec_fn(params_like, cfg, mesh)
+    c_specs = cache_spec_fn(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
     def serve_step(params, cache, tokens):

@@ -1,4 +1,7 @@
 import os
+import subprocess
+import sys
+import textwrap
 
 # Tests must see exactly ONE device (the dry-run alone uses 512 placeholders);
 # cap compilation parallelism for the single-core container.
@@ -7,3 +10,34 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def run_multidev(script, *, devices=8, markers=(), timeout=1200):
+    """Run ``script`` in a subprocess with ``devices`` forced host devices.
+
+    The main pytest process must keep exactly 1 device, so every multi-device
+    test re-execs python with XLA_FLAGS=--xla_force_host_platform_device_count
+    set *before* jax imports. ``script`` is dedented, must NOT import jax at
+    top level itself before the flag (we prepend the env setup), and should
+    print each marker in ``markers`` on success. Returns the CompletedProcess
+    so callers can assert on extra stdout.
+    """
+    prologue = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={int(devices)} "
+            + os.environ.get("XLA_FLAGS", ""))
+    """)
+    env = dict(os.environ)
+    # pin the host platform: the forced-device-count flag applies to the CPU
+    # backend, and letting jax probe for accelerators stalls the subprocess
+    # on containers with a TPU runtime installed but no TPU attached
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", prologue + textwrap.dedent(script)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for marker in markers:
+        assert marker in r.stdout, (marker, r.stdout, r.stderr)
+    return r

@@ -1,0 +1,42 @@
+"""The serve-discipline registry (repro/serve/disciplines.py) is the ONE
+source of truth: the README table is generated from it, the bench artifacts
+must declare it, and the bench FAILs on partial coverage.  These pins make
+"add a discipline" a one-entry change that cannot silently drift."""
+from pathlib import Path
+
+from repro.serve.disciplines import DISCIPLINES, NAMES, markdown_table
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_registry_shape():
+    assert len(DISCIPLINES) == len(set(NAMES)), "duplicate discipline names"
+    # the mesh-sharded serving PR's entry must exist and gate exactness
+    tp = {d.name: d for d in DISCIPLINES}["tp"]
+    assert "token identity" in tp.gate
+    for d in DISCIPLINES:
+        assert d.name and d.title and d.gate
+
+
+def test_readme_table_is_generated_copy():
+    """README's discipline table == markdown_table() verbatim; regenerate
+    with `python -m repro.serve.disciplines`, don't hand-edit."""
+    readme = (REPO / "README.md").read_text()
+    assert markdown_table() in readme, (
+        "README discipline table drifted from the registry — regenerate it "
+        "with: PYTHONPATH=src python -m repro.serve.disciplines")
+
+
+def test_checked_in_artifact_declares_registry():
+    import json
+    report = json.loads((REPO / "BENCH_serve.json").read_text())
+    assert report.get("disciplines") == list(NAMES), (
+        "BENCH_serve.json was generated against a different registry — "
+        "regenerate with benchmarks/serve_bench.py")
+
+
+def test_tables_csv_covers_registry():
+    from benchmarks.tables import serve_disciplines
+    rows = serve_disciplines()
+    names = {r[0].split(".")[-1] for r in rows if r[0].count(".") == 2}
+    assert names == set(NAMES)

@@ -1,22 +1,18 @@
 """Multi-device distribution tests.
 
-These run in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count=8
-(the main test process must keep exactly 1 device), exercising:
+These run in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count
+(the main test process must keep exactly 1 device — the shared runner in
+conftest.py owns that boilerplate), exercising:
   * sharding-rules partitioning of a real train step on a 2x4 mesh,
   * int8-compressed gradient all-reduce vs exact psum,
   * distributed flash-decode (seq-sharded KV) vs the single-device oracle,
   * GPipe pipeline vs sequential stage application.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from conftest import run_multidev
+
+_SCRIPT = """
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
@@ -89,29 +85,20 @@ _SCRIPT = textwrap.dedent("""
     Ws = jnp.asarray(rng.normal(size=(Sstages, dim, dim)).astype(np.float32) * 0.3)
     xs = jnp.asarray(rng.normal(size=(M, mb, dim)).astype(np.float32))
 
-    def stage_fn(W, x):
-        return jnp.tanh(x @ W)
-
-    piped = pipeline_apply(pmesh, stage_fn, num_microbatches=M, axis_name="pipe")
+    piped = pipeline_apply(pmesh, lambda p, x: jnp.tanh(x @ p),
+                           num_microbatches=M, axis_name="pipe")
     with pmesh:
-        got = piped({"w": Ws}, xs) if False else pipeline_apply(
-            pmesh, lambda p, x: jnp.tanh(x @ p), M, "pipe")(Ws, xs)
+        got = piped(Ws, xs)
     want = xs
     for s in range(Sstages):
         want = jnp.tanh(want @ Ws[s])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
     print("PIPELINE_OK")
-""")
+"""
 
 
 @pytest.mark.slow
 def test_multidevice_distribution():
-    env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=1200)
-    assert r.returncode == 0, r.stdout + r.stderr
-    for marker in ("TRAIN_STEP_OK", "COMPRESSED_PSUM_OK", "DIST_DECODE_OK",
-                   "PIPELINE_OK"):
-        assert marker in r.stdout, (marker, r.stdout, r.stderr)
+    run_multidev(_SCRIPT, devices=8,
+                 markers=("TRAIN_STEP_OK", "COMPRESSED_PSUM_OK",
+                          "DIST_DECODE_OK", "PIPELINE_OK"))

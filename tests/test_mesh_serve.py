@@ -1,0 +1,131 @@
+"""Tensor-parallel mesh-sharded serving (DESIGN.md §11).
+
+Subprocess multi-device tests (forced host devices, see conftest.run_multidev):
+for each slot-servable family the masked decode step runs on a (1, tp) mesh
+and must produce TOKEN-IDENTICAL greedy output to the 1-device engine, with
+byte-identical traffic totals (per-shard entries sum exactly) and ZERO
+steady-state recompiles.  Also exercises the TP paged-attention kernel
+dispatch: the head-cut grid (Hkv % tp == 0, no collective) and the
+page-split + LSE-merge fallback (Hkv < tp).
+"""
+import pytest
+
+from conftest import run_multidev
+
+_SCRIPT = """
+    import numpy as np
+    import jax, jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import api
+    from repro.serve import slots as slots_mod
+    from repro.serve.engine import ServeEngine
+    from repro.serve.splitbrain_engine import SplitBrainEngine
+
+    TP = {tp}
+    STEPS = 8
+    assert jax.device_count() == TP, jax.devices()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 127, size=n).astype(np.int32) for n in (7, 12)]
+
+    def slot_run(eng):
+        # admit -> prefill -> insert -> masked decode loop (slot protocol)
+        cache = eng.init_slot_cache(2)
+        toks = np.zeros((2,), np.int32)
+        for i, p in enumerate(prompts):
+            assert eng.reserve_slot(i, len(p), STEPS + 2)
+            c1, tok = eng.prefill_slot(p)
+            cache = eng.insert_slot(cache, c1, i)
+            toks[i] = tok
+        active = np.array([True, True])
+        outs, c0 = [], None
+        for k in range(STEPS):
+            if k == 2:   # steps 0-1 may compile; after that: never again
+                c0 = slots_mod.CompileCounter.instance().count
+            nxt, cache = eng.decode_slots(cache, toks, active)
+            eng.meter_tokens(2)
+            toks = np.asarray(nxt)
+            outs.append(toks.copy())
+        recompiles = slots_mod.CompileCounter.instance().count - c0
+        if hasattr(eng, "measured_bytes_per_token"):
+            nbytes = eng.measured_bytes_per_token()
+        else:
+            nbytes = eng.measured_bytes()
+        return np.stack(outs), nbytes, eng.cache_stats(cache), recompiles
+
+    def check_family(name, ctor, kv_shards=None):
+        base = ctor(make_test_mesh(devices=jax.devices()[:1]))
+        o1, b1, _, r1 = slot_run(base)
+        eng = ctor(make_test_mesh(shape=(1, TP)))
+        o2, b2, stats, r2 = slot_run(eng)
+        assert np.array_equal(o1, o2), (name, o1, o2)
+        assert b1 == b2, (name, b1, b2)   # per-shard entries sum exactly
+        assert r1 == 0 and r2 == 0, (name, r1, r2)
+        if kv_shards is not None:
+            assert stats["kv_shards"] == kv_shards, (name, stats)
+        print("FAMILY_{{}}_OK kv_shards={{}} traffic_shards={{}}".format(
+            name, stats.get("kv_shards"), eng.traffic_shards))
+
+    def serve(cfg):
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        return lambda mesh: ServeEngine(cfg, params, mesh=mesh, max_len=48,
+                                        page_size=8, paged_attn="inplace")
+
+    # llama2 reduced: Hkv=4 — the pool head-cuts at every tested tp
+    lm_cfg = get_config("llama2-7b").reduced(vocab_size=128)
+    check_family("lm", serve(lm_cfg), kv_shards=TP)
+    # gemma2 reduced: GQA Hkv=2 — replicates at tp=4 (fallback), parity holds
+    check_family("gemma2", serve(get_config("gemma2-27b").reduced(
+        vocab_size=128)))
+    check_family("hymba", serve(get_config("hymba-1.5b").reduced(
+        vocab_size=128)))
+    check_family("rwkv", serve(get_config("rwkv6-7b").reduced(
+        vocab_size=128)))
+
+    sb_cfg = get_config("llama2-7b").reduced(vocab_size=128)
+    sb_params = api.init_params(sb_cfg, jax.random.PRNGKey(1))
+    check_family("splitbrain",
+                 lambda mesh: SplitBrainEngine(sb_cfg, sb_params, max_len=48,
+                                               page_size=8,
+                                               paged_attn="inplace",
+                                               mesh=mesh),
+                 kv_shards=TP)
+
+    # ---- TP paged-attention kernel dispatch (interpret-mode Pallas) --------
+    from repro.kernels import ops
+    from repro.kernels import paged_attention as _pa
+    mesh = make_test_mesh(shape=(1, TP))
+
+    def kernel_case(Hq, Hkv, name):
+        B, D, ps, N, Pg = 3, 16, 8, 12, 4
+        q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((N, ps, Hkv, D)), jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((N, ps, Hkv, D)), jnp.float32)
+        table = jnp.asarray(
+            rng.permutation(N)[: B * Pg].reshape(B, Pg), jnp.int32)
+        lens = jnp.asarray([1, 9, 30], jnp.int32)
+        want = _pa.paged_decode_attention(q, kp, vp, table, lens, softcap=2.0)
+        with mesh:
+            got = ops.paged_decode_attention(q, kp, vp, table, lens,
+                                             softcap=2.0, use_pallas=True,
+                                             model_axis="model")
+        err = float(jnp.max(jnp.abs(want - got)))
+        assert err < 1e-5, (name, err)
+
+    kernel_case(4, TP, "head_cut")   # Hkv % tp == 0: per-shard grid
+    kernel_case(4, 1, "merge")       # Hkv < tp: page split + LSE merge
+    print("KERNEL_TP_OK")
+    print("MESH_SERVE_OK")
+"""
+
+FAMILY_MARKERS = [f"FAMILY_{n}_OK" for n in
+                  ("lm", "gemma2", "hymba", "rwkv", "splitbrain")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tp", [2, 4], ids=["tp2", "tp4"])
+def test_mesh_serve_token_parity(tp):
+    run_multidev(_SCRIPT.format(tp=tp), devices=tp,
+                 markers=FAMILY_MARKERS + ["KERNEL_TP_OK", "MESH_SERVE_OK"],
+                 timeout=1800)
