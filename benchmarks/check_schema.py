@@ -11,7 +11,7 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA = "serve_bench/v6"
+SCHEMA = "serve_bench/v7"
 
 # every per-arch result of the four slot-cache disciplines
 RESULT_KEYS = {
@@ -49,6 +49,16 @@ TP_KEYS = {
 TP_RUN_KEYS = {"decode_tokens_per_s", "measured_bytes", "analytic_bytes",
                "traffic_exact", "steady_state_recompiles", "kv_shards",
                "traffic_shards"}
+# the chaos-recovery discipline (serve_bench/v7): seeded device faults
+# (NaN corruption, step error, device loss) vs the uninterrupted run
+CHAOS_KEYS = {
+    "config", "plan", "reference", "chaos", "recovery_log", "fired",
+    "all_faults_fired", "token_identical", "all_done", "quarantines",
+    "failed", "recoveries", "last_recovery_s", "recovery_bounded",
+    "pool_baseline_restored", "zero_steady_state_recompiles",
+}
+CHAOS_RUN_KEYS = {"by_state", "decoded_tokens", "iterations", "quarantines",
+                  "recoveries", "last_recovery_s"}
 
 
 def check(path: str) -> None:
@@ -92,11 +102,22 @@ def check(path: str) -> None:
             miss = TP_RUN_KEYS - r[run].keys()
             assert not miss, f"{path}: {r['config']}.{run} missing {miss}"
         assert r["tp"] >= 2, f"{path}: tp discipline must shard (tp >= 2)"
+    assert report.get("chaos_results"), f"{path}: no chaos_results"
+    for r in report["chaos_results"]:
+        missing = CHAOS_KEYS - r.keys()
+        assert not missing, f"{path}: chaos {r['config']} missing {missing}"
+        for run in ("reference", "chaos"):
+            miss = CHAOS_RUN_KEYS - r[run].keys()
+            assert not miss, f"{path}: {r['config']}.{run} missing {miss}"
+        assert set(r["fired"]) == {"step_corrupt", "step_error",
+                                   "device_loss"}, (
+            f"{path}: chaos must plan all three device fault classes")
     # the serve-discipline registry pin: the artifact must declare every
     # registered discipline (repro/serve/disciplines.py)
     names = report.get("disciplines")
     assert names, f"{path}: no disciplines list"
     assert "tp" in names, f"{path}: registry missing the tp discipline"
+    assert "chaos" in names, f"{path}: registry missing the chaos discipline"
     print(f"{path}: ok ({SCHEMA})")
 
 

@@ -53,6 +53,16 @@ zero steady-state recompiles, the pool actually cut on KV heads
 tp=2 >= the gate x tp=1 (a 1-core host can't parallelize anything, so
 only the structural gates apply there).
 
+An eighth discipline gates crash tolerance (DESIGN.md §12): the same
+shared-prefix trace is replayed through the paged + prefix scheduler with
+a seeded fault plan combining per-slot NaN logit corruption, a raised
+decode step and wholesale device loss.  Gates: every request still
+reaches DONE token-identical to the uninterrupted run (the device is
+stateless — recovery replays from the host-authoritative copy), each
+fault class actually fired, the page pool returns to baseline, recovery
+completes under a wall-clock bound, and a SECOND identical chaos cycle
+compiles nothing (device loss kills buffers, not compiled programs).
+
 The discipline list itself is pinned to the serve-discipline registry
 (repro/serve/disciplines.py): a report that misses a registered
 discipline FAILS, so the bench, the README table, and benchmarks/tables.py
@@ -100,6 +110,7 @@ from repro.serve import pages
 from repro.serve import slots
 from repro.serve.disciplines import NAMES as DISCIPLINE_NAMES
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector, FaultPlan
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 from repro.serve.splitbrain_engine import traffic_model_for
 
@@ -654,7 +665,8 @@ for k in range(steps):
     if k == 2:              # steps 0-1 may compile; steady state after that
         c0 = counter.count
         t0 = time.perf_counter()
-    nxt, cache = eng.decode_slots(cache, toks, active)
+    nxt, ok, cache = eng.decode_slots(cache, toks, active)
+    assert bool(np.asarray(ok).all()), "finite-logits sentinel"
     eng.meter_tokens(B)
     toks = np.asarray(nxt)  # host sync every step, like the serve loop
     outs.append(toks.tolist())
@@ -744,6 +756,110 @@ def bench_tp(arch: str, max_new: int, max_slots: int,
     }
 
 
+def _chaos_stats(out: Dict[str, Any]) -> Dict[str, Any]:
+    """The JSON-safe slice of a scheduler run the chaos report keeps."""
+    return {k: out[k] for k in
+            ("wall_s", "busy_s", "steps", "iterations", "decoded_tokens",
+             "prefill_tokens", "cached_prompt_tokens", "by_state",
+             "quarantines", "failed", "recoveries", "last_recovery_s")}
+
+
+def bench_chaos(arch: str, n_requests: int, max_slots: int,
+                overrides: Dict[str, Any], page_size: int = 8,
+                prefill_chunk: int = 8, prefix_len: int = 16,
+                tail_max: int = 8, max_new: int = 8, seed: int = 0,
+                recovery_s_bound: float = 5.0) -> Dict[str, Any]:
+    """The crash-tolerance serve discipline (DESIGN.md §12): one shared-
+    prefix trace served three times on the SAME paged + prefix engine —
+    uninterrupted (the reference), then through two identical chaos cycles
+    whose seeded plan combines all three device-level injection points
+    (per-slot NaN corruption, a raised decode step, wholesale device loss).
+
+    Gates (via main()'s FAIL path): every request still reaches DONE with
+    tokens IDENTICAL to the uninterrupted run (recovery replays from the
+    host-authoritative state, greedy decode makes that bitwise-checkable);
+    each fault class actually fired (a chaos bench that injects nothing
+    proves nothing); the page pool returns to (0 in-use, 0 reserved,
+    0 drawn-held) after the run; recovery completes under the bound; and
+    the SECOND chaos cycle — recovery paths already warm — compiles
+    NOTHING (rebuild() keeps the jit caches: device loss kills buffers,
+    not compiled host programs)."""
+    cfg = get_config(arch).reduced(**overrides)
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = pages.round_len(prefix_len + tail_max + max_new,
+                              page_size, prefill_chunk)
+    slot_pages = max_len // page_size
+    num_pages = max_slots * slot_pages + 1
+    eng = ServeEngine(cfg, params, max_len=max_len, page_size=page_size,
+                      num_pages=num_pages, prefix_cache="on")
+    reqs = _prefix_workload(cfg, n_requests, max_new, 0.0,
+                            prefix_len, tail_max)
+    plan = FaultPlan(step_corrupt_at=4, step_corrupt_iters=2,
+                     step_corrupt_frac=0.5,
+                     step_error_at=8, step_error_count=1,
+                     device_loss_at=14)
+
+    def run_once(faults):
+        sched = ContinuousBatchingScheduler(eng, max_slots=max_slots,
+                                            prefill_chunk=prefill_chunk,
+                                            faults=faults)
+        out = sched.run(list(reqs))
+        assert not out["rejected"], out["rejected"]
+        out["recovery_log"] = list(sched.recovery_log)
+        return out
+
+    ref = run_once(None)
+    ref_tokens = {r.uid: r.tokens for r in ref.pop("results")}
+    # cycle 1 warms every recovery-path shape; cycle 2 (same plan, same
+    # seed -> same fault sequence) is the measured one and must not compile
+    run_once(FaultInjector(plan, seed=seed))
+    counter = slots.CompileCounter.instance()
+    c0 = counter.count
+    inj = FaultInjector(plan, seed=seed)
+    out = run_once(inj)
+    recompiles = counter.count - c0
+    results = out.pop("results")
+    pool = eng._pager.pool
+    pool_state = (pool.pages_in_use, pool.total_reserved, pool.total_drawn)
+    token_identical = (
+        len(results) == len(ref_tokens)
+        and all(np.array_equal(r.tokens, ref_tokens[r.uid])
+                for r in results))
+    fired = {k: inj.fired(k)
+             for k in ("step_corrupt", "step_error", "device_loss")}
+    return {
+        "config": cfg.name,
+        "n_requests": n_requests,
+        "max_slots": max_slots,
+        "max_len": max_len,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "prefill_chunk": prefill_chunk,
+        "max_new": max_new,
+        "seed": seed,
+        "plan": dataclasses.asdict(plan),
+        "reference": _chaos_stats(ref),
+        "chaos": _chaos_stats(out),
+        "recovery_log": out["recovery_log"],
+        "fired": fired,
+        "all_faults_fired": all(v > 0 for v in fired.values()),
+        "token_identical": token_identical,
+        "all_done": out["by_state"] == {"DONE": len(reqs)},
+        "quarantines": out["quarantines"],
+        "failed": out["failed"],
+        "recoveries": out["recoveries"],
+        "last_recovery_s": out["last_recovery_s"],
+        "recovery_s_bound": recovery_s_bound,
+        "recovery_bounded": 0.0 < out["last_recovery_s"] <= recovery_s_bound,
+        "pool_state_after": pool_state,
+        "pool_baseline_restored": pool_state == (0, 0, 0),
+        "steady_state_recompiles": recompiles,
+        "zero_steady_state_recompiles": recompiles == 0,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -791,6 +907,17 @@ def main(argv=None) -> int:
     # device subprocesses (the device count is a process-level XLA flag)
     tp_results = [bench_tp("llama2-7b", max_new, max(args.slots // 2, 4),
                            overrides, page_size=args.page_size)]
+    # the chaos-recovery discipline: the same shared-prefix trace with a
+    # seeded plan firing all three device-level injection points, gated on
+    # token identity vs the uninterrupted run of the same engine.  The
+    # recovery bound is wall-clock generous (loaded CI box); every other
+    # chaos gate is absolute correctness
+    chaos_recovery_s = 5.0
+    chaos_results = [bench_chaos(
+        "llama2-7b", max(n_requests // 4, 8), max(args.slots // 4, 4),
+        overrides, page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk, max_new=max(max_new // 2, 8),
+        recovery_s_bound=chaos_recovery_s)]
 
     # rwkv keeps dense recurrent state (no-op page table): the memory gate
     # only applies where the pool actually pages KV
@@ -869,6 +996,20 @@ def main(argv=None) -> int:
             "timing_gated": tp_timing_gated,
         } for r in tp_results
     }
+    summary["chaos"] = {
+        r["config"]: {
+            "token_identical": r["token_identical"],
+            "all_done": r["all_done"],
+            "fired": r["fired"],
+            "quarantines": r["quarantines"],
+            "failed": r["failed"],
+            "recoveries": r["recoveries"],
+            "last_recovery_s": round(r["last_recovery_s"], 4),
+            "pool_baseline_restored": r["pool_baseline_restored"],
+            "zero_steady_state_recompiles":
+                r["zero_steady_state_recompiles"],
+        } for r in chaos_results
+    }
     summary["prefix"] = {
         r["config"]: {
             "prefix_overlap": round(r["prefix_overlap"], 2),
@@ -887,7 +1028,7 @@ def main(argv=None) -> int:
         } for r in prefix_results
     }
     report = {
-        "schema": "serve_bench/v6",
+        "schema": "serve_bench/v7",
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "quick": args.quick,
@@ -902,10 +1043,12 @@ def main(argv=None) -> int:
         "gate_overload_ttft_ratio": overload_gate,
         "gate_tp_decode_speedup": tp_gate,
         "tp_timing_gated": tp_timing_gated,
+        "gate_chaos_recovery_s": chaos_recovery_s,
         "results": results,
         "prefix_results": prefix_results,
         "overload_results": overload_results,
         "tp_results": tp_results,
+        "chaos_results": chaos_results,
         "summary": summary,
     }
     # registry cross-check: every discipline in the registry must have a
@@ -918,6 +1061,7 @@ def main(argv=None) -> int:
     covered |= {"prefix"} if prefix_results else set()
     covered |= {"overload"} if overload_results else set()
     covered |= {"tp"} if tp_results else set()
+    covered |= {"chaos"} if chaos_results else set()
     missing_disciplines = [n for n in DISCIPLINE_NAMES if n not in covered]
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -958,6 +1102,17 @@ def main(argv=None) -> int:
                 and (not tp_timing_gated
                      or r["decode_tokens_per_s_speedup"] >= tp_gate))
 
+    def chaos_ok(r):
+        return (r["token_identical"]
+                and r["all_done"]
+                and r["all_faults_fired"]
+                and r["recoveries"] > 0
+                and r["quarantines"] > 0
+                and r["failed"] == 0
+                and r["pool_baseline_restored"]
+                and r["recovery_bounded"]
+                and r["zero_steady_state_recompiles"])
+
     ok = all(r["requests_per_s_speedup"] >= gate
              and r["steady_state_recompiles"] == 0
              and r["paged_steady_state_recompiles"] == 0
@@ -967,6 +1122,7 @@ def main(argv=None) -> int:
         and all(prefix_ok(r) for r in prefix_results) \
         and all(overload_ok(r) for r in overload_results) \
         and all(tp_ok(r) for r in tp_results) \
+        and all(chaos_ok(r) for r in chaos_results) \
         and not missing_disciplines
     if not ok:
         print(f"FAIL: continuous < {gate}x sequential requests/s, paged < "
@@ -982,7 +1138,11 @@ def main(argv=None) -> int:
               "from tp=1, traffic inexact, recompile, pool not head-cut"
               + (f", decode speedup < {tp_gate}x" if tp_timing_gated
                  else "")
-              + f"), or registry coverage ({missing_disciplines})",
+              + "), a chaos gate (recovered tokens differ from the "
+              "uninterrupted run, a request not DONE, a fault class never "
+              "fired, no recovery/quarantine, pool not back to baseline, "
+              f"recovery > {chaos_recovery_s}s, recompile on the repeat "
+              f"cycle), or registry coverage ({missing_disciplines})",
               file=sys.stderr)
     return 0 if ok else 1
 

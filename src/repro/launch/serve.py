@@ -27,12 +27,23 @@
   XLA_FLAGS=--xla_force_host_platform_device_count=2 JAX_PLATFORMS=cpu \
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --page-size 8 --tp 2
+
+  # chaos: seeded device-fault injection against the recovery seam
+  # (DESIGN.md §12) — NaN-corrupt half the decoding slots for two
+  # iterations, then lose the device wholesale; the run must still finish
+  # every request, and --recovery-log captures the quarantine/recover
+  # event stream as JSON
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --page-size 8 --prefill-chunk 8 --prefix-cache on \
+      --chaos-seed 0 --recovery-log recovery_events.json \
+      --chaos-plan "step_corrupt_at=4,step_corrupt_iters=2,device_loss_at=10"
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +54,38 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import api
 from repro.serve import pages
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector, FaultPlan
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+
+
+def _parse_chaos_plan(spec: str, ap: argparse.ArgumentParser) -> FaultPlan:
+    """``key=val,key=val`` over FaultPlan's fields, coerced per field type
+    (tuple fields take ``+``-separated uids, e.g. ``step_corrupt_uids=1+3``).
+    """
+    fields = {f.name: f for f in dataclasses.fields(FaultPlan)}
+    kwargs = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        key, sep, val = item.partition("=")
+        key, val = key.strip(), val.strip()
+        if not sep or key not in fields:
+            ap.error(f"--chaos-plan: unknown or malformed entry {item!r} "
+                     f"(fields: {', '.join(sorted(fields))})")
+        ftype = str(fields[key].type)
+        try:
+            if "Tuple" in ftype:
+                kwargs[key] = tuple(int(v) for v in val.split("+") if v)
+            elif ftype == "float":
+                kwargs[key] = float(val)
+            else:
+                kwargs[key] = int(val)
+        except ValueError:
+            ap.error(f"--chaos-plan: bad value {val!r} for {key} ({ftype})")
+    if not kwargs:
+        ap.error("--chaos-plan named no fault points")
+    return FaultPlan(**kwargs)
 
 
 def main(argv=None):
@@ -95,6 +137,18 @@ def main(argv=None):
                          "pool cut on KV heads, token-identical to --tp 1 "
                          "(needs >= tp visible devices; see module docstring "
                          "for forcing host devices)")
+    ap.add_argument("--chaos-plan", default=None,
+                    help="seeded fault injection: comma-separated "
+                         "FaultPlan fields (repro/serve/faults.py), e.g. "
+                         "'step_corrupt_at=4,step_corrupt_iters=2,"
+                         "device_loss_at=10'; device faults exercise "
+                         "quarantine + host-authoritative recovery")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="PRNG seed for --chaos-plan: same (plan, seed) -> "
+                         "same fault sequence")
+    ap.add_argument("--recovery-log", default=None,
+                    help="write the scheduler's quarantine/recover event "
+                         "stream to this path as JSON")
     ap.add_argument("--preemption", choices=("on", "off"), default="off",
                     help="SLA-aware preemption: when a higher-priority "
                          "request cannot be admitted, evict a lower-"
@@ -117,6 +171,14 @@ def main(argv=None):
                                 or args.preemption == "on"):
         ap.error("--priority/--deadline-s/--preemption only apply to the "
                  "--continuous serve loop")
+    if not args.continuous and (args.chaos_plan is not None
+                                or args.recovery_log is not None):
+        ap.error("--chaos-plan/--recovery-log only apply to the "
+                 "--continuous serve loop")
+    faults = None
+    if args.chaos_plan is not None:
+        faults = FaultInjector(_parse_chaos_plan(args.chaos_plan, ap),
+                               seed=args.chaos_seed)
     priorities = [0]
     if args.priority is not None:
         try:
@@ -164,7 +226,7 @@ def main(argv=None):
         sched = ContinuousBatchingScheduler(
             eng, max_slots=args.slots, eos_id=args.eos_id,
             prefill_chunk=args.prefill_chunk,
-            preemption=args.preemption == "on")
+            preemption=args.preemption == "on", faults=faults)
         out = sched.run(reqs)
         report = {
             "arch": cfg.name,
@@ -183,6 +245,21 @@ def main(argv=None):
         }
         if args.page_size:
             report["cache"] = eng.cache_stats(sched.cache)
+        if faults is not None:
+            fired: dict = {}
+            for name, *_ in faults.events:
+                fired[name] = fired.get(name, 0) + 1
+            report["chaos"] = {
+                "seed": args.chaos_seed,
+                "fired": fired,
+                "quarantines": out["quarantines"],
+                "failed": out["failed"],
+                "recoveries": out["recoveries"],
+                "last_recovery_s": round(out["last_recovery_s"], 4),
+            }
+        if args.recovery_log is not None:
+            Path(args.recovery_log).write_text(
+                json.dumps(sched.recovery_log, indent=2) + "\n")
         print(json.dumps(report))
         return out
 

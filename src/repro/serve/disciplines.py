@@ -65,6 +65,16 @@ DISCIPLINES: Tuple[Discipline, ...] = (
         "host-owned and replicated",
         "token identity tp=2 vs tp=1; per-shard traffic sums byte-exactly; "
         "decode tokens/s >= 1.6x on >= 2 cores"),
+    Discipline(
+        "chaos",
+        "crash-tolerant serving (DESIGN.md §12): seeded step errors, "
+        "per-slot NaN logit corruption and wholesale device loss injected "
+        "into the paged + prefix engine; the scheduler quarantines "
+        "poisoned slots and rebuilds device state from the "
+        "host-authoritative copy",
+        "token identity vs the uninterrupted run; pool occupancy back to "
+        "baseline; recovery time bounded; zero recompiles on a repeat "
+        "chaos cycle"),
 )
 
 NAMES: Tuple[str, ...] = tuple(d.name for d in DISCIPLINES)

@@ -522,10 +522,18 @@ class ServeEngine(pages_mod.PagedEngineMixin):
             return self._slot_insert(batched_cache, slot_cache,
                                      jnp.int32(slot))
 
-    def decode_slots(self, cache, tokens, active):
+    def decode_slots(self, cache, tokens, active, corrupt=None):
         """One masked batched decode step: every slot computes, only active
         slots advance (inactive cache leaves frozen).  Fixed shapes — the
         steady-state loop re-dispatches one compiled program forever.
+
+        Returns ``(next_tokens, ok, cache)`` where ``ok`` is the per-slot
+        finite-logits sentinel: False means that slot's logits went
+        non-finite this step and its token is garbage — the scheduler
+        quarantines it instead of appending.  ``corrupt`` (optional
+        ``(n,)`` bool) is the fault-injection input: True slots get their
+        logits NaN-poisoned inside the jitted step (all-False by default;
+        fixed shape, zero extra recompiles).
 
         Paged layout: the host allocates any page the step will write into
         (position ``len``); then ``paged_attn="inplace"`` (default) appends
@@ -536,6 +544,8 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         math, scatter the one new token per active slot back to its page.
         """
         n = int(tokens.shape[0])
+        if corrupt is None:
+            corrupt = np.zeros((n,), bool)
         if self._paging_active:
             act = np.asarray(active, bool)
             with self.mesh:
@@ -546,23 +556,27 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 rcfg = self._ragged_cfg
 
                 if self._paged_attn == "inplace":
-                    def paged_step(params, pcache, table, toks, act_m):
+                    def paged_step(params, pcache, table, toks, act_m, bad):
                         logits, pc = api.paged_decode_step(
                             params, pcache, table, toks, rcfg, write=act_m,
                             seq_axes=sa)
+                        logits = slots_mod.corrupt_logits(logits, bad)
                         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                        return nxt, pc
+                        ok = slots_mod.finite_logits(logits)
+                        return nxt, ok, pc
                 else:
-                    def paged_step(params, pcache, table, toks, act_m):
+                    def paged_step(params, pcache, table, toks, act_m, bad):
                         view = pages_mod.gather_tree(pcache, table, ba, sa)
                         pos = view["len"]
                         logits, new = api.decode_step(params, view, toks,
                                                       rcfg)
+                        logits = slots_mod.corrupt_logits(logits, bad)
                         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        ok = slots_mod.finite_logits(logits)
                         new = slots_mod.select_slots(act_m, new, view, ba)
                         pc = pages_mod.scatter_token_tree(
                             pcache, new, table, pos, act_m, ba, sa)
-                        return nxt, pc
+                        return nxt, ok, pc
 
                 # explicit placements: pool head-cut, page table replicated
                 # (host-owned), per-slot vectors on the batch axis — the
@@ -573,13 +587,14 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 self._paged_step = jax.jit(
                     paged_step, donate_argnums=(1,),
                     in_shardings=(self._param_sh, self._pool_sh, repl,
-                                  vec, vec),
-                    out_shardings=(vec, self._pool_sh))
+                                  vec, vec, vec),
+                    out_shardings=(vec, vec, self._pool_sh))
             with self.mesh:
                 out = self._paged_step(self.params, cache,
                                        self._pager.table(),
                                        jnp.asarray(tokens, jnp.int32),
-                                       jnp.asarray(active, bool))
+                                       jnp.asarray(active, bool),
+                                       jnp.asarray(corrupt, bool))
             self._pager.post_decode(act)
             return out
         self._meter_kv_read(np.asarray(active, bool))
@@ -591,5 +606,23 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         with self.mesh:
             return self._slot_step_jit[n](
                 self.params, cache, jnp.asarray(tokens, jnp.int32),
-                jnp.asarray(active, bool))
+                jnp.asarray(active, bool), jnp.asarray(corrupt, bool))
+
+    def rebuild(self, n_slots: int):
+        """Re-materialise every device-side byte from host state after a
+        device loss: params re-placed from the host copy, a fresh page pool
+        (or dense slot cache) allocated, and the host pager reset.
+
+        What is deliberately NOT touched: the jit caches.  Compiled
+        programs are immutable host artifacts under the split-brain
+        contract — a device failure invalidates *buffers*, never code — so
+        the rebuilt pool re-enters the SAME compiled step and recovery
+        costs zero recompiles (serve_bench gates this).  The radix prefix
+        index dies with the pool (its device bytes are gone); recovered
+        requests republish as they re-prefill, so sharing re-forms among
+        the survivors.
+        """
+        with self.mesh:
+            self.params = jax.device_put(self.params, self._param_sh)
+        return self.init_slot_cache(n_slots)
 

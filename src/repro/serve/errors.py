@@ -23,6 +23,10 @@ __all__ = [
     "InjectedFault",
     "ReservationError",
     "PageLifecycleError",
+    "DeviceError",
+    "StepError",
+    "StepCorruption",
+    "DeviceLost",
 ]
 
 
@@ -61,3 +65,30 @@ class ReservationError(SchedulerError):
 class PageLifecycleError(SchedulerError, ValueError):
     """Pool lifecycle misuse (double free, reserve-after-reserve).  Also a
     ``ValueError`` for callers that predate the hierarchy."""
+
+
+class DeviceError(SchedulerError):
+    """Base of device-side failures the host can recover from.  The
+    split-brain contract makes the device stateless: every byte of dynamic
+    state has a host-authoritative copy, so a device failure is survivable
+    by rebuilding device arrays from host state (``scheduler.recover()``)
+    rather than fatal."""
+
+
+class StepError(DeviceError):
+    """The persistent decode step raised (driver fault, launch failure).
+    The slot cache that was donated into the failed dispatch is suspect;
+    recovery rebuilds it from host state."""
+
+
+class StepCorruption(DeviceError):
+    """A slot produced non-finite logits (flipped bits, bad accumulate).
+    Detected by the in-step finite-logits sentinel; the affected request is
+    quarantined and retried, degrading to FAILED after N strikes."""
+
+
+class DeviceLost(DeviceError):
+    """The engine's device arrays were invalidated wholesale (device
+    reset, OOM-kill, preempted accelerator).  Everything device-side —
+    params, page pool, slot cache — must be re-materialised from host
+    copies before serving can continue."""

@@ -25,6 +25,23 @@ matrix over the same suite:
                   (mid-decode cancellation burst); their pages must return
                   within one scheduler iteration.
 
+and three *device-level* points that exercise the split-brain recovery
+seam (the host must survive anything the stateless device does):
+
+  step_error    — the persistent decode step raises ``StepError`` for a
+                  window of iterations (driver fault / launch failure):
+                  the scheduler must recover() and resume token-identical.
+  step_corrupt  — a seeded subset of DECODING requests gets NaN logits
+                  inside the jitted step (via the ``corrupt`` mask input)
+                  for a window of iterations: the finite-logits sentinel
+                  must quarantine exactly those slots, batchmates unharmed.
+  device_loss   — at one iteration the engine's device arrays are
+                  invalidated wholesale (``DeviceLost``); everything is
+                  rebuilt from host-authoritative state.
+  step_stall    — one decode step blocks for ``step_stall_s`` seconds (a
+                  wedged dispatch) so the OnlineServer watchdog has a real
+                  hang to detect.
+
 Every fired event is recorded in ``events`` (name, uid/iteration) so tests
 can assert the fault actually happened — a chaos test that silently
 injected nothing proves nothing.
@@ -32,11 +49,12 @@ injected nothing proves nothing.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.errors import InjectedFault
+from repro.serve.errors import DeviceLost, InjectedFault, StepError
 
 __all__ = ["FaultPlan", "FaultInjector"]
 
@@ -61,6 +79,24 @@ class FaultPlan:
     # mid-decode cancellation burst at one iteration
     cancel_burst_at: Optional[int] = None
     cancel_burst_frac: float = 0.5
+    # device faults: starting at step_error_at, the next step_error_count
+    # decode dispatches raise (counted on fires, not iterations — a
+    # recovering scheduler spends iterations with nothing decoding)
+    step_error_at: Optional[int] = None
+    step_error_count: int = 1
+    # per-slot logits corruption: a seeded fraction (or explicit uids) of
+    # DECODING requests is NaN-corrupted while iteration is in
+    # [at, at + iters) — a long window drives the strike/FAILED path, a
+    # short one proves transient corruption retries token-identically
+    step_corrupt_at: Optional[int] = None
+    step_corrupt_iters: int = 1
+    step_corrupt_frac: float = 0.5
+    step_corrupt_uids: Tuple[int, ...] = ()
+    # wholesale device-array invalidation at one iteration
+    device_loss_at: Optional[int] = None
+    # a wedged dispatch: one decode step blocks for step_stall_s seconds
+    step_stall_at: Optional[int] = None
+    step_stall_s: float = 0.0
 
 
 class FaultInjector:
@@ -84,6 +120,10 @@ class FaultInjector:
         self._stalls: Dict[int, int] = {}      # uid -> iterations remaining
         self._stall_decided: Dict[int, bool] = {}
         self._burst_fired = False
+        self._device_lost = False
+        self._step_errors_left = int(plan.step_error_count)
+        self._step_stalled = False
+        self._corrupt_picked: Optional[Tuple[int, ...]] = None
 
     # ------------------------------------------------------------ loop hooks
     def on_step(self, sched) -> None:
@@ -91,9 +131,12 @@ class FaultInjector:
         p = self.plan
         if (p.cancel_burst_at is not None and not self._burst_fired
                 and self.iteration >= p.cancel_burst_at):
-            self._burst_fired = True
+            # defer until requests are actually DECODING: firing the burst
+            # into an empty batch would consume the one-shot and inject
+            # nothing (a chaos test that injects nothing proves nothing)
             uids = sched.decoding_uids()
             if uids:
+                self._burst_fired = True
                 n = max(1, int(round(len(uids) * p.cancel_burst_frac)))
                 picked = self.rng.choice(len(uids), size=min(n, len(uids)),
                                          replace=False)
@@ -153,6 +196,73 @@ class FaultInjector:
                 self._stalls[uid] = int(p.stall_iters)
                 self.events.append(("stall", uid, self.iteration))
         return uid in self._stalls
+
+    # --------------------------------------------------------- device hooks
+    def step_fault(self) -> None:
+        """Consulted immediately before each decode dispatch; raises the
+        planned device fault (``DeviceLost`` once, ``StepError`` for every
+        iteration in its window).  The scheduler catches ``DeviceError``
+        and recovers from host state."""
+        p = self.plan
+        it = self.iteration
+        if (p.device_loss_at is not None and not self._device_lost
+                and it >= p.device_loss_at):
+            self._device_lost = True
+            self.events.append(("device_loss", None, it))
+            raise DeviceLost(
+                f"injected device loss (seed={self.seed}, iteration={it})")
+        if (p.step_error_at is not None and it >= p.step_error_at
+                and self._step_errors_left > 0):
+            self._step_errors_left -= 1
+            self.events.append(("step_error", None, it))
+            raise StepError(
+                f"injected step error (seed={self.seed}, iteration={it})")
+
+    def step_stall(self) -> None:
+        """Wedge ONE decode step for ``step_stall_s`` wall seconds (the
+        watchdog's quarry).  Blocks the loop thread, as a hung dispatch
+        would."""
+        p = self.plan
+        if (p.step_stall_at is not None and not self._step_stalled
+                and self.iteration >= p.step_stall_at
+                and p.step_stall_s > 0.0):
+            self._step_stalled = True
+            self.events.append(("step_stall", None, self.iteration))
+            time.sleep(p.step_stall_s)
+
+    def corrupt_uids(self, decoding_uids: List[int]) -> Tuple[int, ...]:
+        """Which of the currently-DECODING uids get NaN logits this
+        iteration.  Explicit ``step_corrupt_uids`` are targeted directly;
+        otherwise a seeded fraction is picked ONCE at the first iteration
+        of the window that has a non-empty decode batch (deferred, like
+        cancel_burst, so an empty batch can't consume the pick) and that
+        same set is corrupted for the rest of the window — surviving
+        quarantine/re-admission, which is what drives the strike counter.
+        """
+        p = self.plan
+        if p.step_corrupt_at is None or not decoding_uids:
+            return ()
+        it = self.iteration
+        if not (p.step_corrupt_at <= it
+                < p.step_corrupt_at + p.step_corrupt_iters):
+            return ()
+        if p.step_corrupt_uids:
+            hit = tuple(u for u in decoding_uids if u in p.step_corrupt_uids)
+        else:
+            if self._corrupt_picked is None:
+                n = max(1, int(round(len(decoding_uids)
+                                     * p.step_corrupt_frac)))
+                idx = self.rng.choice(len(decoding_uids),
+                                      size=min(n, len(decoding_uids)),
+                                      replace=False)
+                self._corrupt_picked = tuple(
+                    decoding_uids[int(i)]
+                    for i in sorted(int(j) for j in idx))
+            hit = tuple(u for u in self._corrupt_picked
+                        if u in decoding_uids)
+        for uid in hit:
+            self.events.append(("step_corrupt", uid, it))
+        return hit
 
     def fired(self, kind: str) -> int:
         """How many events of ``kind`` actually fired (tests assert > 0)."""

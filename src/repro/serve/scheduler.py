@@ -29,8 +29,9 @@ Request lifecycle (DESIGN.md §8) — every request walks the state machine
   QUEUED ─> PREFILL ─> DECODE ─> DONE
      │          │          ├────> CANCELLED   (cancel(uid), ≤ 1 iteration)
      │          │          ├────> TIMEOUT     (deadline_s exceeded)
-     │          │          └────> EVICTED ──> QUEUED   (preemption, with
-     │          └───> REJECTED                          bounded backoff)
+     │          │          ├────> FAILED      (quarantined max_strikes times)
+     │          │          └────> EVICTED ──> QUEUED   (preemption or
+     │          └───> REJECTED                 quarantine, bounded backoff)
      └──> REJECTED / CANCELLED / TIMEOUT
 
 driven by the OPEN-LOOP api: ``submit()`` enqueues, ``step()`` runs one
@@ -80,7 +81,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.serve.errors import SchedulerError
+from repro.serve.errors import DeviceError, SchedulerError
 
 __all__ = ["Request", "RequestResult", "RejectedRequest", "RequestState",
            "ContinuousBatchingScheduler"]
@@ -88,8 +89,11 @@ __all__ = ["Request", "RequestResult", "RejectedRequest", "RequestState",
 
 class RequestState(str, enum.Enum):
     """The request lifecycle's states (DESIGN.md §8).  Terminal states are
-    DONE / CANCELLED / TIMEOUT / REJECTED; EVICTED is transient (the victim
-    re-queues) and shows up only as ``RequestResult.preemptions > 0``."""
+    DONE / CANCELLED / TIMEOUT / REJECTED / FAILED; EVICTED is transient
+    (the victim re-queues) and shows up only as
+    ``RequestResult.preemptions > 0``.  FAILED is the quarantine terminal:
+    a request whose decode step kept producing non-finite logits through
+    ``max_strikes`` retries (DESIGN.md §12)."""
     QUEUED = "QUEUED"
     PREFILL = "PREFILL"
     DECODE = "DECODE"
@@ -98,6 +102,7 @@ class RequestState(str, enum.Enum):
     EVICTED = "EVICTED"
     TIMEOUT = "TIMEOUT"
     REJECTED = "REJECTED"
+    FAILED = "FAILED"
 
 
 @dataclasses.dataclass
@@ -141,6 +146,7 @@ class _ReqRecord:
     tokens: List[int] = dataclasses.field(default_factory=list)
     cached: int = 0               # cumulative prefix-cache hits (tokens)
     preemptions: int = 0
+    strikes: int = 0              # quarantines (non-finite logits) so far
     not_before: int = 0           # earliest re-admission ITERATION (backoff)
     admitted_s: Optional[float] = None    # first admission
     first_token_s: Optional[float] = None
@@ -196,6 +202,7 @@ class ContinuousBatchingScheduler:
                  preemption: bool = False,
                  backoff_steps: int = 2,
                  backoff_cap: int = 32,
+                 max_strikes: int = 3,
                  faults=None):
         self.engine = engine
         self.max_slots = int(max_slots)
@@ -216,6 +223,9 @@ class ContinuousBatchingScheduler:
                 f"got {backoff_steps}/{backoff_cap}")
         self.backoff_steps = int(backoff_steps)
         self.backoff_cap = int(backoff_cap)
+        if max_strikes < 1:
+            raise ValueError(f"max_strikes must be >= 1, got {max_strikes}")
+        self.max_strikes = int(max_strikes)
         self.faults = faults
         self.cache = None
         self._began = False
@@ -244,6 +254,11 @@ class ContinuousBatchingScheduler:
         self._prefill_tokens = 0
         self._cached_tokens = 0
         self._preempt_count = 0
+        self._quarantines = 0
+        self._failed_count = 0
+        self._recoveries = 0
+        self._last_recovery_s = 0.0
+        self.recovery_log: List[Dict[str, Any]] = []
         self._unmetered = 0
         self._slept_s = 0.0
         self._t_start = time.perf_counter()
@@ -682,16 +697,32 @@ class ContinuousBatchingScheduler:
             return
         eng = self.engine
         n_active = int(self._active.sum())
-        nxt, self.cache = eng.decode_slots(self.cache, self._tokens,
-                                           self._active)
+        corrupt = None
+        if self.faults is not None:
+            self.faults.step_stall()
+            self.faults.step_fault()       # may raise StepError/DeviceLost
+            bad = self.faults.corrupt_uids(self.decoding_uids())
+            if bad:
+                corrupt = np.zeros_like(self._active)
+                for slot, st in self._states.items():
+                    if st.rec.req.uid in bad:
+                        corrupt[slot] = True
+        nxt, ok, self.cache = eng.decode_slots(self.cache, self._tokens,
+                                               self._active, corrupt)
         self._decode_steps += 1
         self._decoded_tokens += n_active
         self._unmetered += n_active
         nxt = np.asarray(nxt)
+        okh = np.asarray(ok)
         t_step = self._now()
         for slot in np.flatnonzero(self._active):
             st = self._states[slot]
             rec = st.rec
+            if not okh[slot]:
+                # the sentinel flagged non-finite logits: the token is
+                # garbage — quarantine the slot instead of appending it
+                self._quarantine_slot(slot)
+                continue
             tok = int(nxt[slot])
             if rec.first_token_s is None:
                 rec.first_token_s = t_step
@@ -710,6 +741,85 @@ class ContinuousBatchingScheduler:
             else:
                 self._tokens[slot] = tok
 
+    def _quarantine_slot(self, slot: int) -> None:
+        """Quarantine a slot whose logits went non-finite: the device-side
+        bytes this request touched are suspect, so its pages are freed
+        WITHOUT publishing them into the prefix index (a poisoned prefix
+        would spread to every future sharer), and the request re-queues
+        with strike-keyed bounded backoff.  After ``max_strikes`` strikes
+        it degrades to the terminal FAILED state — a deterministically-
+        corrupting request must not retry forever — while its batchmates
+        keep decoding untouched.  Strikes are counted separately from
+        preemptions: an evicted victim did nothing wrong."""
+        st = self._states.pop(slot)
+        rec = st.rec
+        self._release_slot(slot)
+        rec.strikes += 1
+        self._quarantines += 1
+        self.recovery_log.append({
+            "event": "quarantine", "uid": rec.req.uid,
+            "iteration": self._iterations, "strikes": rec.strikes})
+        if rec.strikes >= self.max_strikes:
+            self._failed_count += 1
+            self.recovery_log.append({
+                "event": "failed", "uid": rec.req.uid,
+                "iteration": self._iterations,
+                "reason": f"StepCorruption: non-finite logits in "
+                          f"{rec.strikes} decode attempts"})
+            self._finish_record(rec, RequestState.FAILED)
+            return
+        rec.not_before = self._iterations + min(
+            self.backoff_steps * (2 ** (rec.strikes - 1)), self.backoff_cap)
+        self._pending.append(rec)
+
+    # ------------------------------------------------------------- recovery
+    def recover(self, reason: str = "device fault") -> None:
+        """Rebuild the device half of the world from host-authoritative
+        state after a device failure (DESIGN.md §12).
+
+        The split-brain contract makes this possible: prompts, generated
+        tails, page tables and counters all live on the host, so the
+        device's arrays are disposable.  Every in-flight request — decoding
+        slots AND chunked-prefill jobs — goes back to QUEUED with its
+        generated tail intact (``_effective`` re-prefills prompt+tail, so
+        greedy decode resumes bitwise token-identically) and WITHOUT a
+        preemption or strike charge: the device failed, not the request.
+        The engine then ``rebuild()``s params + pool; the prefix index dies
+        with the pool (its device bytes are gone) and re-forms as recovered
+        requests republish.  Compiled programs are untouched — recovery
+        costs zero recompiles (gated in serve_bench)."""
+        self._ensure_began()
+        t0 = time.perf_counter()
+        n_requeued = 0
+        for slot in sorted(self._states):
+            st = self._states.pop(slot)
+            self._pending.append(st.rec)
+            n_requeued += 1
+        while self._prefilling:
+            job = self._prefilling.popleft()
+            computed = job.consumed - job.cached
+            self._prefill_tokens += computed
+            self._unmetered += computed
+            self._pending.append(job.rec)
+            n_requeued += 1
+        self.cache = None            # the old device arrays are gone
+        eng = self.engine
+        n = self.max_slots
+        if hasattr(eng, "rebuild"):
+            self.cache = eng.rebuild(n)
+        else:
+            self.cache = eng.init_slot_cache(n)
+        self._tokens = np.zeros((n,), np.int32)
+        self._active = np.zeros((n,), bool)
+        self._free = list(range(n - 1, -1, -1))
+        self._recoveries += 1
+        dt = time.perf_counter() - t0
+        self._last_recovery_s = dt
+        self.recovery_log.append({
+            "event": "recover", "reason": str(reason),
+            "iteration": self._iterations, "requeued": n_requeued,
+            "recovery_s": dt})
+
     # ------------------------------------------------------------ open loop
     def step(self, realtime: bool = False) -> List[RequestResult]:
         """ONE scheduler iteration: fault hooks, cancellations, deadlines,
@@ -724,7 +834,12 @@ class ContinuousBatchingScheduler:
         self._expire_deadlines()
         self._admit(realtime)
         self._prefill_tick()
-        self._decode_tick()
+        try:
+            self._decode_tick()
+        except DeviceError as e:
+            # a typed device failure is survivable by construction: every
+            # byte of dynamic state has a host copy — rebuild and resume
+            self.recover(reason=f"{type(e).__name__}: {e}")
         self._iterations += 1
         return self._results[n0:]
 
@@ -781,6 +896,10 @@ class ContinuousBatchingScheduler:
             "prefill_tokens": self._prefill_tokens,
             "cached_prompt_tokens": self._cached_tokens,
             "preemptions": self._preempt_count,
+            "quarantines": self._quarantines,
+            "failed": self._failed_count,
+            "recoveries": self._recoveries,
+            "last_recovery_s": self._last_recovery_s,
             "by_state": by_state,
             "wall_s": wall_s,
             "busy_s": busy_s,

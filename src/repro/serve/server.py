@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -116,12 +117,29 @@ class OnlineServer:
 
     ``idle_wait_s`` is how long the loop parks when it has neither ops nor
     work (an op arrival wakes it immediately).
+
+    ``watchdog_s`` arms the step heartbeat watchdog (DESIGN.md §12): the
+    loop stamps a heartbeat every iteration, and a daemon thread trips when
+    the heartbeat goes stale for ``watchdog_s`` seconds while requests are
+    outstanding — a wedged decode dispatch.  The watchdog only *flags*; the
+    recovery itself (``scheduler.recover()``) runs on the loop thread at
+    its next safe point, because that thread is the sole owner of the
+    scheduler and JAX state.  Consecutive watchdog recoveries back off
+    exponentially (``recover_backoff_s`` doubling up to
+    ``recover_backoff_cap_s``) so a persistently sick device cannot spin
+    the loop in rebuild storms.
     """
 
     def __init__(self, scheduler: ContinuousBatchingScheduler,
-                 idle_wait_s: float = 0.001):
+                 idle_wait_s: float = 0.001,
+                 watchdog_s: Optional[float] = None,
+                 recover_backoff_s: float = 0.05,
+                 recover_backoff_cap_s: float = 2.0):
         self.scheduler = scheduler
         self.idle_wait_s = float(idle_wait_s)
+        self.watchdog_s = None if watchdog_s is None else float(watchdog_s)
+        self.recover_backoff_s = float(recover_backoff_s)
+        self.recover_backoff_cap_s = float(recover_backoff_cap_s)
         self._ops: List[Tuple] = []
         self._lock = threading.Lock()
         self._wake = threading.Event()
@@ -129,7 +147,14 @@ class OnlineServer:
         self._handles: Dict[int, RequestHandle] = {}
         self._uid = 0
         self._thread: Optional[threading.Thread] = None
+        self._watchdog_thread: Optional[threading.Thread] = None
         self._loop_error: Optional[BaseException] = None
+        self._heartbeat = time.monotonic()
+        self._watchdog_trips = 0
+        self._recover_flag = False
+        self._recover_streak = 0
+        self._recover_wait = 0.0
+        self._last_recover_t = 0.0
 
     # ------------------------------------------------------------ lifecycle
     def start(self, warmup: bool = False) -> "OnlineServer":
@@ -140,9 +165,14 @@ class OnlineServer:
             # scheduler — keeps first-request latency honest
             self.scheduler.warmup()
         self.scheduler.begin()
+        self._heartbeat = time.monotonic()
         self._thread = threading.Thread(target=self._loop,
                                         name="serve-loop", daemon=True)
         self._thread.start()
+        if self.watchdog_s is not None:
+            self._watchdog_thread = threading.Thread(
+                target=self._watchdog, name="serve-watchdog", daemon=True)
+            self._watchdog_thread.start()
         return self
 
     def stop(self, drain: bool = True, timeout: Optional[float] = None
@@ -161,6 +191,9 @@ class OnlineServer:
         self._wake.set()
         self._thread.join(timeout)
         self._thread = None
+        if self._watchdog_thread is not None:
+            self._watchdog_thread.join(timeout=5.0)
+            self._watchdog_thread = None
         if self._loop_error is not None:
             raise RuntimeError("serve loop died") from self._loop_error
 
@@ -231,11 +264,60 @@ class OnlineServer:
                     state=RequestState.REJECTED.value))
                 h.reject_reason = rej.reason
 
+    # ---------------------------------------------------------- the watchdog
+    def _watchdog(self) -> None:
+        """Heartbeat monitor: trips when the loop has outstanding requests
+        but has not stamped a heartbeat for ``watchdog_s`` seconds.  Runs
+        on its own daemon thread; never touches scheduler state — it only
+        raises the recover flag and rearms."""
+        interval = max(self.watchdog_s / 4.0, 0.005)
+        while not self._stop.is_set():
+            time.sleep(interval)
+            if self._thread is None or not self._thread.is_alive():
+                return
+            with self._lock:
+                busy = bool(self._handles)
+            if not busy:
+                # idle loop: nothing can be wedged, keep the clock fresh
+                self._heartbeat = time.monotonic()
+                continue
+            if time.monotonic() - self._heartbeat > self.watchdog_s:
+                self._watchdog_trips += 1
+                self._recover_flag = True
+                self._heartbeat = time.monotonic()   # rearm, don't re-trip
+                self._wake.set()
+
+    def _maybe_recover(self) -> None:
+        """Loop-thread half of the watchdog: apply the flagged recovery at
+        a safe point, with bounded exponential backoff between consecutive
+        recoveries.  A quiet period of 2x the watchdog window resets the
+        backoff streak."""
+        if not self._recover_flag:
+            return
+        self._recover_flag = False
+        now = time.monotonic()
+        if (self._recover_streak
+                and now - self._last_recover_t
+                > 2.0 * (self.watchdog_s or 0.0) + self._recover_wait):
+            self._recover_streak = 0
+            self._recover_wait = 0.0
+        wait = self._recover_wait - (now - self._last_recover_t)
+        if self._recover_streak and wait > 0:
+            time.sleep(wait)
+        self.scheduler.recover(reason="watchdog: step heartbeat lost")
+        self._last_recover_t = time.monotonic()
+        self._recover_streak += 1
+        self._recover_wait = min(
+            self.recover_backoff_s * (2 ** (self._recover_streak - 1)),
+            self.recover_backoff_cap_s)
+
     def _loop(self) -> None:
         sched = self.scheduler
         try:
             while True:
+                self._heartbeat = time.monotonic()
                 self._drain_ops()
+                self._maybe_recover()
                 if sched.has_work():
                     sched.step(realtime=False)
                     self._publish_terminal()
@@ -271,5 +353,10 @@ class OnlineServer:
             "decoded_tokens": getattr(s, "_decoded_tokens", 0),
             "prefill_tokens": getattr(s, "_prefill_tokens", 0),
             "preemptions": getattr(s, "_preempt_count", 0),
+            "quarantines": getattr(s, "_quarantines", 0),
+            "failed": getattr(s, "_failed_count", 0),
+            "recoveries": getattr(s, "_recoveries", 0),
+            "last_recovery_s": getattr(s, "_last_recovery_s", 0.0),
+            "watchdog_trips": self._watchdog_trips,
             "outstanding": len(self._handles),
         }

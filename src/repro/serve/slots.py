@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["bucket", "batch_axes", "select_slots", "make_slot_insert",
-           "CompileCounter"]
+           "corrupt_logits", "finite_logits", "CompileCounter"]
 
 
 def bucket(n: int, floor: int = 1) -> int:
@@ -72,6 +72,25 @@ def select_slots(active: jnp.ndarray, new: Any, old: Any, axes: Any) -> Any:
     return jax.tree.map(
         lambda n, o, ax: jnp.where(_mask_for(active, ax, n.ndim), n, o),
         new, old, axes)
+
+
+def corrupt_logits(logits: jnp.ndarray, corrupt: jnp.ndarray) -> jnp.ndarray:
+    """NaN-poison the logits of slots where ``corrupt`` is True — the
+    fault-injection half of the finite-logits sentinel.  Traced into the
+    ONE masked decode step with a fixed ``(n_slots,)`` bool input, so the
+    all-False steady state pays one ``where`` and zero recompiles, and an
+    injected corruption is REAL non-finite data flowing through the same
+    detection path a flipped bit would take."""
+    shape = [corrupt.shape[0]] + [1] * (logits.ndim - 1)
+    return jnp.where(corrupt.reshape(shape), jnp.nan, logits)
+
+
+def finite_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot ``(n_slots,)`` bool: True iff every logit of that slot is
+    finite.  Returned alongside the sampled tokens from the decode step —
+    it rides the same device->host transfer, costing no extra sync."""
+    axes = tuple(range(1, logits.ndim))
+    return jnp.isfinite(logits).all(axis=axes)
 
 
 def make_slot_insert(axes: Any, batched_sh: Any = None,

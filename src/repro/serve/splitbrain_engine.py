@@ -590,6 +590,18 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
     def _stats_seq_axes(self):
         return self._SEQ_AXES
 
+    def rebuild(self, n_slots: int) -> Dict[str, Any]:
+        """Re-materialise every device-side byte from host state after a
+        device loss: weights re-placed from the host copy, a fresh page
+        pool (or dense slot cache) allocated, host pager reset.  The jit
+        caches are deliberately kept — compiled programs are immutable
+        host artifacts (a device failure invalidates buffers, never code),
+        so the rebuilt pool re-enters the SAME compiled step and recovery
+        costs zero recompiles."""
+        with self.mesh:
+            self._weights = jax.device_put(self._weights, self._param_sh)
+        return self.init_slot_cache(n_slots)
+
     def new_request_cache(self) -> Dict[str, Any]:
         """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
         return self.init_cache(1)
@@ -691,10 +703,15 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
             return self._slot_insert(batched_cache, slot_cache,
                                      jnp.int32(slot))
 
-    def decode_slots(self, cache: Dict[str, Any], tokens, active):
+    def decode_slots(self, cache: Dict[str, Any], tokens, active,
+                     corrupt=None):
         """One masked batched split-brain token step: every slot computes,
         only ``active`` slots advance (K/V and ``len`` frozen elsewhere).
         Fixed (max_slots, ...) shapes — zero recompiles in steady state.
+        Returns ``(next_tokens, ok, cache)``: ``ok`` is the per-slot
+        finite-logits sentinel and ``corrupt`` (optional ``(n,)`` bool)
+        NaN-poisons the flagged slots' logits inside the jitted step (the
+        fault-injection hook; all-False default, zero extra recompiles).
         Paged layout: host allocates the page position ``len`` falls in;
         ``paged_attn="inplace"`` (default) appends K/V to the pages and
         attends directly through the traced table (``_paged_token_step`` —
@@ -702,6 +719,8 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         reference discipline (gather K/V through the table, same token
         step, scatter one token back per active slot)."""
         n = int(np.asarray(tokens).shape[0])
+        if corrupt is None:
+            corrupt = np.zeros((n,), bool)
         if self._paging_active:
             act = np.asarray(active, bool)
             with self.mesh:
@@ -711,22 +730,28 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                 ba, sa = self._SLOT_AXES, self._SEQ_AXES
 
                 if self._paged_attn == "inplace":
-                    def paged_step(weights, pcache, table, tok, act_m):
-                        nxt, _, k2, v2, ln2 = self._paged_token_step(
+                    def paged_step(weights, pcache, table, tok, act_m, bad):
+                        _, logits, k2, v2, ln2 = self._paged_token_step(
                             weights, pcache["k"], pcache["v"], table,
                             pcache["len"], tok, act_m)
-                        return nxt, {"k": k2, "v": v2, "len": ln2}
+                        logits = slots_mod.corrupt_logits(logits, bad)
+                        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        ok = slots_mod.finite_logits(logits)
+                        return nxt, ok, {"k": k2, "v": v2, "len": ln2}
                 else:
-                    def paged_step(weights, pcache, table, tok, act_m):
+                    def paged_step(weights, pcache, table, tok, act_m, bad):
                         view = pages_mod.gather_tree(pcache, table, ba, sa)
                         pos = view["len"]
-                        nxt, _, k2, v2, ln2 = self._token_step(
+                        _, logits, k2, v2, ln2 = self._token_step(
                             weights, view["k"], view["v"], pos, tok)
+                        logits = slots_mod.corrupt_logits(logits, bad)
+                        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                        ok = slots_mod.finite_logits(logits)
                         new = {"k": k2, "v": v2,
                                "len": jnp.where(act_m, ln2, pos)}
                         pc = pages_mod.scatter_token_tree(
                             pcache, new, table, pos, act_m, ba, sa)
-                        return nxt, pc
+                        return nxt, ok, pc
 
                 # explicit placements: pool head-cut, page table replicated
                 # (host-owned), per-slot vectors on the batch axis — the
@@ -737,21 +762,26 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                 self._paged_step = jax.jit(
                     paged_step, donate_argnums=(1,),
                     in_shardings=(self._param_sh, self._pool_sh, repl,
-                                  vec, vec),
-                    out_shardings=(vec, self._pool_sh))
+                                  vec, vec, vec),
+                    out_shardings=(vec, vec, self._pool_sh))
             with self.mesh:
-                nxt, pc = self._paged_step(
+                nxt, ok, pc = self._paged_step(
                     self._weights, cache, self._pager.table(),
                     jnp.asarray(tokens, jnp.int32),
-                    jnp.asarray(active, bool))
+                    jnp.asarray(active, bool),
+                    jnp.asarray(corrupt, bool))
             self._pager.post_decode(act)
-            return nxt, pc
+            return nxt, ok, pc
         self._meter_kv_read(np.asarray(active, bool))
         if self._slot_step is None:
-            def slot_step(weights, k, v, ln, tok, active):
-                nxt, _, k2, v2, ln2 = self._token_step(weights, k, v, ln, tok)
+            def slot_step(weights, k, v, ln, tok, active, bad):
+                _, logits, k2, v2, ln2 = self._token_step(weights, k, v, ln,
+                                                          tok)
+                logits = slots_mod.corrupt_logits(logits, bad)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                ok = slots_mod.finite_logits(logits)
                 m = active[None, :, None, None, None]   # (L, B, Hkv, S, hd)
-                return (nxt, jnp.where(m, k2, k), jnp.where(m, v2, v),
+                return (nxt, ok, jnp.where(m, k2, k), jnp.where(m, v2, v),
                         jnp.where(active, ln2, ln))
 
             sh = self._cache_shardings(self._slot_count)
@@ -759,13 +789,14 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
             self._slot_step = jax.jit(
                 slot_step, donate_argnums=(1, 2),
                 in_shardings=(self._param_sh, sh["k"], sh["v"], sh["len"],
-                              vec, vec),
-                out_shardings=(vec, sh["k"], sh["v"], sh["len"]))
+                              vec, vec, vec),
+                out_shardings=(vec, vec, sh["k"], sh["v"], sh["len"]))
         with self.mesh:
-            nxt, k, v, ln = self._slot_step(
+            nxt, ok, k, v, ln = self._slot_step(
                 self._weights, cache["k"], cache["v"], cache["len"],
-                jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool))
-        return nxt, {"k": k, "v": v, "len": ln}
+                jnp.asarray(tokens, jnp.int32), jnp.asarray(active, bool),
+                jnp.asarray(corrupt, bool))
+        return nxt, ok, {"k": k, "v": v, "len": ln}
 
     def meter_tokens(self, n: int) -> None:
         """Replay ``n`` active tokens' boundary crossings (scheduler hook)."""

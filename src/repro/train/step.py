@@ -159,6 +159,13 @@ def make_slot_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
     (max_slots, ...), so the steady-state serve loop re-dispatches this ONE
     compiled program forever — zero recompiles.
 
+    Besides the tokens, the step returns a per-slot finite-logits sentinel
+    (``ok``): False flags a slot whose logits went non-finite this step, so
+    the scheduler can quarantine it instead of appending garbage.  The
+    ``corrupt`` input is the fault-injection hook — slots where it is True
+    get their logits NaN-poisoned *inside* the jitted step (all-False in
+    the steady state; fixed shape, so still zero recompiles).
+
     ``cfg`` must have ``parallel.aligned_decode=False``: slots sit at ragged
     positions, so the lockstep scalar-index cache write is wrong here.
     """
@@ -169,19 +176,23 @@ def make_slot_step(cfg: ModelConfig, mesh: Mesh, params_like, cache_like,
     c_specs = cache_spec_fn(cache_like, cfg, mesh)
     b = shd.MeshAxes(mesh, cfg).resolve("batch")
 
-    def slot_step(params, cache, tokens, active):
+    def slot_step(params, cache, tokens, active, corrupt):
         logits, new_cache = api.decode_step(params, cache, tokens, cfg)
+        logits = slots_mod.corrupt_logits(logits, corrupt)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = slots_mod.finite_logits(logits)
         new_cache = slots_mod.select_slots(active, new_cache, cache, axes)
-        return next_tok, new_cache
+        return next_tok, ok, new_cache
 
     return jax.jit(
         slot_step,
         in_shardings=(shd.with_sharding(mesh, p_specs),
                       shd.with_sharding(mesh, c_specs),
                       NamedSharding(mesh, P(b)),
+                      NamedSharding(mesh, P(b)),
                       NamedSharding(mesh, P(b))),
         out_shardings=(NamedSharding(mesh, P(b)),
+                       NamedSharding(mesh, P(b)),
                        shd.with_sharding(mesh, c_specs)),
         donate_argnums=(1,) if donate else ())
 

@@ -188,6 +188,26 @@ def test_cancel_burst_frees_pages_within_one_iteration(setup):
     assert _pool_baseline(eng) == (0, 0, 0)
 
 
+def test_cancel_burst_defers_until_decoding(setup):
+    """Regression: ``cancel_burst_at=0`` arms the burst before ANY request
+    has reached DECODE.  The old code consumed the one-shot on the empty
+    batch and silently injected nothing — a chaos test that injects
+    nothing proves nothing.  The burst must defer until decoding uids
+    exist and then actually fire."""
+    cfg, eng, prompts, base = setup
+    inj = FaultInjector(FaultPlan(cancel_burst_at=0, cancel_burst_frac=1.0),
+                        seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts[:2]):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    _drain(sched)
+    assert inj.fired("cancel_burst") > 0
+    res = sched.poll()
+    assert any(r.state == "CANCELLED" for r in res)
+    assert _pool_baseline(eng) == (0, 0, 0)
+
+
 def test_stalled_prefill_reaped_by_deadline(setup):
     """A wedged prefill job (chunks withheld indefinitely) cannot hold its
     slot forever: the request's deadline reaps it as TIMEOUT and the pool

@@ -43,7 +43,8 @@ _SCRIPT = """
         for k in range(STEPS):
             if k == 2:   # steps 0-1 may compile; after that: never again
                 c0 = slots_mod.CompileCounter.instance().count
-            nxt, cache = eng.decode_slots(cache, toks, active)
+            nxt, ok, cache = eng.decode_slots(cache, toks, active)
+            assert bool(np.asarray(ok).all()), "finite-logits sentinel"
             eng.meter_tokens(2)
             toks = np.asarray(nxt)
             outs.append(toks.copy())

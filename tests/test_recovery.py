@@ -1,0 +1,303 @@
+"""Crash-tolerant serving: device-loss recovery, NaN quarantine, watchdog.
+
+The split-brain contract (PAPER.md §Split-Brain) makes the device stateless
+— every byte of dynamic state has a host-authoritative copy — so a device
+failure mid-decode must be fully recoverable from host state alone, and the
+recovered output must be BITWISE token-identical to the uninterrupted
+greedy run.  This suite drives the three device-level injection points of
+serve/faults.py against the real scheduler + engines:
+
+  device_loss   — wholesale array invalidation: scheduler.recover() rebuilds
+                  params/pool/slot cache from host state; in-flight requests
+                  re-admit (through the prefix cache where armed) and resume
+                  token-identically — tested per family, composed with
+                  preemption (the recovery×preemption satellite).
+  step_error    — the decode dispatch raises: recovery runs and the pool
+                  returns to baseline after EVERY injected error.
+  step_corrupt  — per-slot NaN logits: the in-step finite-logits sentinel
+                  quarantines exactly the poisoned slots (batchmates keep
+                  decoding untouched); a transient window retries to DONE
+                  token-identically, a persistent corruption degrades to the
+                  terminal FAILED state after max_strikes.
+  step_stall    — a wedged dispatch: the OnlineServer heartbeat watchdog
+                  trips, recovery runs on the loop thread, and the requests
+                  still finish token-identically.
+
+Like tests/test_faults.py this file is swept by the CI chaos-smoke seed
+matrix (CHAOS_SEED): same (plan, seed) -> same fault sequence.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.engine import ServeEngine
+from repro.serve.errors import (DeviceError, DeviceLost, SchedulerError,
+                                StepCorruption, StepError)
+from repro.serve.faults import FaultInjector, FaultPlan
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.server import OnlineServer
+from repro.serve.splitbrain_engine import SplitBrainEngine
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+MAX_NEW = 6
+FAMILIES = ["stablelm-1.6b", "gemma2-27b", "hymba-1.5b", "rwkv6-7b",
+            "splitbrain"]
+
+
+def _build(arch):
+    """(cfg, engine, prefill_chunk) — mirrors tests/test_preemption.py: the
+    split-brain build is paged + prefix-armed so recovery exercises the
+    pool rebuild and prefix re-publication; the others are dense."""
+    name = "tinyllama-1.1b" if arch == "splitbrain" else arch
+    cfg = get_config(name).reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    if arch == "splitbrain":
+        eng = SplitBrainEngine(cfg, params, max_len=32, quantize=False,
+                               page_size=4, num_pages=17, prefix_cache="on")
+        return cfg, eng, 4
+    return cfg, ServeEngine(cfg, params, max_len=32), None
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    """One shared paged + prefix-armed ServeEngine (the pool-occupancy
+    assertions need a real page pool)."""
+    cfg = get_config("stablelm-1.6b").reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="none"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=32, page_size=4, num_pages=33,
+                      prefix_cache="on")
+    rng = np.random.default_rng(CHAOS_SEED)
+    prompts = [rng.integers(1, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in (5, 9, 4, 7)]
+    base = [np.asarray(eng.generate(p[None, :], max_new=MAX_NEW)
+                       ["tokens"][0]) for p in prompts]
+    return cfg, eng, prompts, base
+
+
+def _fused(eng, prompt, max_new=MAX_NEW):
+    return np.asarray(eng.generate(prompt[None, :], max_new=max_new)
+                      ["tokens"][0])
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, (t,)).astype(np.int32)
+            for t in lens]
+
+
+def _pool_baseline(eng):
+    pool = eng._pager.pool
+    return (pool.pages_in_use, pool.total_reserved, pool.total_drawn)
+
+
+def _drain(sched, limit=500):
+    for _ in range(limit):
+        sched.step()
+        if not sched.has_work():
+            return
+    raise AssertionError("scheduler did not drain")
+
+
+def test_device_error_hierarchy():
+    """The typed recovery errors: device failures are SchedulerErrors (the
+    loop may catch them) under one DeviceError base (the recovery path
+    catches exactly that)."""
+    for exc in (StepError, StepCorruption, DeviceLost):
+        assert issubclass(exc, DeviceError)
+        assert issubclass(exc, SchedulerError)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_preempted_then_device_loss_token_identical(arch):
+    """The recovery×preemption satellite: a victim that is preempted AND
+    then survives a wholesale device loss must still resume bitwise
+    token-identical to the uninterrupted greedy run — prompts, generated
+    tails and page tables are host-authoritative, so neither event can
+    lose a token."""
+    cfg, eng, chunk = _build(arch)
+    p0, p1 = _prompts(cfg, (5, 6))
+    base0, base1 = _fused(eng, p0), _fused(eng, p1)
+
+    inj = FaultInjector(FaultPlan(device_loss_at=8), seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=1, preemption=True,
+                                        backoff_steps=1, prefill_chunk=chunk,
+                                        faults=inj)
+    sched.begin()
+    sched.submit(Request(uid=0, prompt=p0, max_new=MAX_NEW, priority=0))
+    for _ in range(3):
+        sched.step()
+    assert sched.decoding_uids() == [0]      # victim is mid-decode
+    sched.submit(Request(uid=1, prompt=p1, max_new=MAX_NEW, priority=5))
+    _drain(sched)
+    assert inj.fired("device_loss") == 1
+    assert sched._recoveries == 1
+    assert any(e["event"] == "recover" for e in sched.recovery_log)
+    res = {r.uid: r for r in sched.poll()}
+    assert not sched.poll_rejected()
+    assert res[0].preemptions >= 1
+    for uid, b in ((0, base0), (1, base1)):
+        assert res[uid].state == "DONE"
+        np.testing.assert_array_equal(res[uid].tokens, b)
+    if getattr(eng, "_pager", None) is not None:
+        assert _pool_baseline(eng) == (0, 0, 0)
+
+
+def test_pool_returns_to_baseline_after_every_step_error(paged_setup):
+    """Persistent step errors (two consecutive raising iterations): each
+    one triggers a recovery whose pool rebuild must leave ZERO occupancy
+    the instant the recovering iteration ends — reserved pages and radix
+    refcounts died with the pool, not stranded — and the drained run still
+    serves everything token-identically."""
+    cfg, eng, prompts, base = paged_setup
+    inj = FaultInjector(FaultPlan(step_error_at=3, step_error_count=2),
+                        seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, prefill_chunk=4,
+                                        faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    seen = 0
+    for _ in range(500):
+        sched.step()
+        if sched._recoveries > seen:
+            seen = sched._recoveries
+            # the recovery just ran: the rebuilt pool must be EMPTY now
+            assert _pool_baseline(eng) == (0, 0, 0), \
+                "pages survived the pool rebuild"
+        if not sched.has_work():
+            break
+    assert inj.fired("step_error") == 2
+    assert sched._recoveries == 2
+    res = {r.uid: r for r in sched.poll()}
+    assert not sched.poll_rejected()
+    for i, b in enumerate(base):
+        assert res[i].state == "DONE"
+        np.testing.assert_array_equal(res[i].tokens, b)
+    assert _pool_baseline(eng) == (0, 0, 0)
+
+
+def test_transient_corruption_quarantines_and_retries(paged_setup):
+    """A two-iteration NaN window over a seeded half of the decode batch:
+    the sentinel quarantines the poisoned slots (their garbage token is
+    never appended), the retry outlives the window, and EVERY request —
+    quarantined or batchmate — finishes DONE and token-identical."""
+    cfg, eng, prompts, base = paged_setup
+    inj = FaultInjector(
+        FaultPlan(step_corrupt_at=4, step_corrupt_iters=2,
+                  step_corrupt_frac=0.5), seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=4, faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    _drain(sched)
+    assert inj.fired("step_corrupt") > 0
+    assert sched._quarantines > 0
+    assert sched._failed_count == 0          # transient: nobody degrades
+    res = {r.uid: r for r in sched.poll()}
+    assert not sched.poll_rejected()
+    for i, b in enumerate(base):
+        assert res[i].state == "DONE"
+        np.testing.assert_array_equal(res[i].tokens, b)
+    assert _pool_baseline(eng) == (0, 0, 0)
+
+
+def test_persistent_corruption_fails_after_max_strikes(paged_setup):
+    """A request whose logits are ALWAYS non-finite must not retry forever:
+    after max_strikes quarantines it degrades to the terminal FAILED state,
+    while its batchmates decode token-identically throughout — the whole
+    point of quarantine is that one sick stream cannot poison the batch."""
+    cfg, eng, prompts, base = paged_setup
+    inj = FaultInjector(
+        FaultPlan(step_corrupt_at=0, step_corrupt_iters=10 ** 9,
+                  step_corrupt_uids=(1,)), seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=4, max_strikes=3,
+                                        faults=inj)
+    sched.begin()
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    _drain(sched)
+    assert sched._quarantines == 3 and sched._failed_count == 1
+    assert any(e["event"] == "failed" and e["uid"] == 1
+               for e in sched.recovery_log)
+    res = {r.uid: r for r in sched.poll()}
+    assert res[1].state == "FAILED" and res[1].gen_len == 0
+    for i in (0, 2, 3):
+        assert res[i].state == "DONE"
+        np.testing.assert_array_equal(res[i].tokens, base[i])
+    assert _pool_baseline(eng) == (0, 0, 0)
+
+
+def test_watchdog_detects_wedged_step_and_recovers(paged_setup):
+    """A decode dispatch that wedges for ~1s: the heartbeat watchdog
+    (0.2s window) trips while the loop thread is stuck, the recovery runs
+    at the loop's next safe point, and the requests still finish DONE and
+    token-identical.  stats() exposes the whole incident."""
+    cfg, eng, prompts, base = paged_setup
+    inj = FaultInjector(FaultPlan(step_stall_at=2, step_stall_s=1.0),
+                        seed=CHAOS_SEED)
+    sched = ContinuousBatchingScheduler(eng, max_slots=2, faults=inj)
+    srv = OnlineServer(sched, watchdog_s=0.2)
+    with srv:
+        handles = [srv.submit(p, max_new=MAX_NEW) for p in prompts[:2]]
+        results = [h.result(timeout=120.0) for h in handles]
+    assert inj.fired("step_stall") == 1
+    stats = srv.stats()
+    assert stats["watchdog_trips"] >= 1
+    assert stats["recoveries"] >= 1
+    assert stats["last_recovery_s"] >= 0.0
+    for r, b in zip(results, base[:2]):
+        assert r.state == "DONE"
+        np.testing.assert_array_equal(r.tokens, b)
+    assert _pool_baseline(eng) == (0, 0, 0)
+
+
+def test_recovery_resumes_through_prefix_cache(paged_setup):
+    """After a device loss the radix index is empty (its device bytes are
+    gone) — but recovered requests republish as they re-prefill, so a
+    recovered request whose prefix was re-published by an earlier
+    re-admission seeds from the pool instead of recomputing (the PR 5
+    re-admission path, exercised under recovery).
+
+    The reference is a no-fault run of the SAME scheduler configuration,
+    not the fused generate: the reduced random-weight models produce exact
+    argmax ties at some positions (seed-dependent), and chunked-prefill
+    numerics may break a tie differently than the fused forward — the
+    recovery contract is "identical to the uninterrupted run of the same
+    pipeline", which is what this compares."""
+    cfg, eng, prompts, base = paged_setup
+    shared = np.concatenate([prompts[0], prompts[0]])[:8]   # page-aligned
+    p_a = shared.copy()
+    p_b = np.concatenate([shared, prompts[1][:3]])
+
+    def _run(faults):
+        sched = ContinuousBatchingScheduler(eng, max_slots=2,
+                                            prefill_chunk=4,
+                                            max_prefill_jobs=1,
+                                            faults=faults)
+        sched.begin()
+        sched.submit(Request(uid=0, prompt=p_a, max_new=MAX_NEW))
+        sched.submit(Request(uid=1, prompt=p_b, max_new=MAX_NEW))
+        _drain(sched)
+        assert not sched.poll_rejected()
+        return sched, {r.uid: r for r in sched.poll()}
+
+    _, ref = _run(None)                                     # uninterrupted
+    inj = FaultInjector(FaultPlan(device_loss_at=6), seed=CHAOS_SEED)
+    sched, res = _run(inj)
+    assert sched._recoveries == 1
+    np.testing.assert_array_equal(res[0].tokens, ref[0].tokens)
+    np.testing.assert_array_equal(res[1].tokens, ref[1].tokens)
+    # the re-admissions after the loss went through the prefix cache: the
+    # faulted run accumulates strictly more reused tokens than the single
+    # admission of the uninterrupted run
+    assert res[1].cached_tokens > ref[1].cached_tokens
+    assert _pool_baseline(eng) == (0, 0, 0)
