@@ -1,17 +1,17 @@
 """Validate BENCH_serve.json artifacts against the current bench schema.
 
-CI runs this over both the freshly generated --quick artifact and the
-checked-in full-run artifact, so a schema bump that forgets to regenerate
+CI runs this over the checked-in full-run artifact (and any freshly
+generated --quick one), so a schema bump that forgets to regenerate
 (or a bench edit that silently drops a gated field) fails the build:
 
-  PYTHONPATH=src python benchmarks/check_schema.py BENCH_serve_ci.json BENCH_serve.json
+  PYTHONPATH=src python benchmarks/check_schema.py BENCH_serve.json
 """
 from __future__ import annotations
 
 import json
 import sys
 
-SCHEMA = "serve_bench/v7"
+SCHEMA = "serve_bench/v8"
 
 # every per-arch result of the four slot-cache disciplines
 RESULT_KEYS = {
@@ -59,6 +59,17 @@ CHAOS_KEYS = {
 }
 CHAOS_RUN_KEYS = {"by_state", "decoded_tokens", "iterations", "quarantines",
                   "recoveries", "last_recovery_s"}
+# the quantized-KV-pages discipline (serve_bench/v8): bf16 vs int8 page
+# pools of identical geometry — storage uplift, divergence, byte-exactness
+KV_QUANT_KEYS = {
+    "config", "kv_dtype", "bf16", "quant",
+    "resident_tokens_per_byte_uplift", "kv_read_bytes_shrink",
+    "pool_bytes_bf16", "pool_bytes_quant", "token_divergence_frac",
+    "token_flip_rate", "boundary_bytes_identical", "traffic_exact",
+    "zero_steady_state_recompiles",
+}
+KV_QUANT_RUN_KEYS = {"steady_state_recompiles", "traffic",
+                     "measured_boundary_bytes", "kv_read_bytes", "cache"}
 
 
 def check(path: str) -> None:
@@ -112,12 +123,26 @@ def check(path: str) -> None:
         assert set(r["fired"]) == {"step_corrupt", "step_error",
                                    "device_loss"}, (
             f"{path}: chaos must plan all three device fault classes")
+    assert report.get("kv_quant_results"), f"{path}: no kv_quant_results"
+    for r in report["kv_quant_results"]:
+        missing = KV_QUANT_KEYS - r.keys()
+        assert not missing, (
+            f"{path}: kv_quant {r['config']} missing {missing}")
+        for run in ("bf16", "quant"):
+            miss = KV_QUANT_RUN_KEYS - r[run].keys()
+            assert not miss, f"{path}: {r['config']}.{run} missing {miss}"
+            assert {"kv_dtype", "kv_token_bytes_stored",
+                    "pool_bytes"} <= r[run]["cache"].keys(), (path, run)
+        assert r["kv_dtype"] in ("int8", "fp8"), (
+            f"{path}: kv_quant must exercise a sub-byte-scale pool dtype")
     # the serve-discipline registry pin: the artifact must declare every
     # registered discipline (repro/serve/disciplines.py)
     names = report.get("disciplines")
     assert names, f"{path}: no disciplines list"
     assert "tp" in names, f"{path}: registry missing the tp discipline"
     assert "chaos" in names, f"{path}: registry missing the chaos discipline"
+    assert "kv_quant" in names, (
+        f"{path}: registry missing the kv_quant discipline")
     print(f"{path}: ok ({SCHEMA})")
 
 

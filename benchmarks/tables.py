@@ -240,7 +240,7 @@ def serve_disciplines() -> List[Row]:
         for i, d in enumerate(DISCIPLINES)
     ]
     rows.append(("serve.disciplines_registered", us, float(len(DISCIPLINES)),
-                 "8 (serve_bench/v7)"))
+                 "9 (serve_bench/v8)"))
     return rows
 
 

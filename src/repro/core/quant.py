@@ -30,6 +30,9 @@ from repro.core import csd
 
 __all__ = [
     "QuantizedLinear",
+    "QuantizedLeaf",
+    "KV_DTYPES",
+    "KV_QMAX",
     "quantize_weights",
     "dequantize",
     "quantize_activations_int8",
@@ -68,6 +71,72 @@ class QuantizedLinear:
     @property
     def shape(self):
         return self.codes.shape
+
+
+# KV-cache page quantization formats (serve-path paged pools, DESIGN.md §13).
+# fp8 uses the e4m3 grid — the inference-standard format with the wider
+# dynamic range per page (the per-page scale absorbs the exponent anyway).
+KV_DTYPES = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
+KV_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantizedLeaf:
+    """A quantized page-pool cache leaf: integer/fp8 codes plus per-page,
+    per-kv-head float32 scales riding beside the page table.
+
+    ``codes`` has the pool leaf's layout ``(*lead, num_pages, page_size,
+    *tail)``; ``scales`` drops the ``page_size`` axis and the trailing
+    head_dim axis — one scale per (leading dims ×) page × kv-head.  The
+    scale is a POWER OF TWO (``2^ceil(log2(amax/qmax))``), which makes the
+    quantize→dequantize→requantize cycle idempotent: shared prefix pages
+    quantize once and every re-encode of already-roundtripped content
+    reproduces the same stored values (the prefix-cache identity contract,
+    DESIGN.md §13).
+
+    Registered WITH key paths so the sharding-rules engine sees
+    ``.../k/0/codes`` (sharded like the pool leaf) and ``.../k/0/scales``.
+    ``kv_dtype`` names the code format ("int8"/"fp8"); ``out_dtype`` the
+    logical dense dtype dequantized views are produced in.
+    """
+
+    def __init__(self, codes, scales, kv_dtype: str = "int8",
+                 out_dtype: str = "bfloat16"):
+        self.codes = codes
+        self.scales = scales
+        self.kv_dtype = kv_dtype
+        self.out_dtype = out_dtype
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("codes"), self.codes),
+                 (jax.tree_util.GetAttrKey("scales"), self.scales)),
+                (self.kv_dtype, self.out_dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def __getitem__(self, idx):
+        """Index codes and scales together — leading (layer/group) axes are
+        shared, so per-layer pool slices stay QuantizedLeaf."""
+        return QuantizedLeaf(self.codes[idx], self.scales[idx],
+                             self.kv_dtype, self.out_dtype)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def dtype(self):
+        return self.codes.dtype
+
+    @property
+    def nbytes(self):
+        return int(self.codes.nbytes) + int(self.scales.nbytes)
+
+    def __repr__(self):
+        return (f"QuantizedLeaf({self.kv_dtype}, codes={self.codes.shape}, "
+                f"scales={self.scales.shape})")
 
 
 def _csd_cost_lut() -> jnp.ndarray:

@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.quant import QuantizedLeaf
 
 # param-name -> logical spec on the trailing dims (stacked leading dims get None)
 _COL = ("fsdp", "model")     # (d_in, out): out split over TP
@@ -236,21 +237,34 @@ def pool_pspecs(pcache, cfg: ModelConfig, mesh: Mesh, sa):
     ``(num_pages, page_size, Hkv, hd)``) and cut on KV heads; the rest keep
     their dense slot layout and take the serve rules.  Shape-checked like
     every rule here — an Hkv that ``tp`` does not divide replicates.
+
+    Quantized pools (``QuantizedLeaf`` leaves, DESIGN.md §13) get a
+    QuantizedLeaf of specs back: codes shard like the dense pool leaf and
+    the per-page scales — trailing ``(num_pages, Hkv)`` — put the model
+    axis on their own Hkv dim so they follow the KV-head cut.
+
+    ``sa`` is mapped FIRST so QuantizedLeaf subtrees arrive whole at the
+    leaf fn instead of being flattened into codes/scales.
     """
     ax = MeshAxes(mesh, cfg)
 
-    def spec(path, leaf, s_ax):
-        if not hasattr(leaf, "shape"):
-            return P()
+    def spec(path, s_ax, leaf):
         key = _path_str(path)
         paged = s_ax is not None and s_ax >= 0
         matched = _match(_POOL_CACHE_RULES if paged else _SERVE_CACHE_RULES,
                          key)
-        if matched is None:
+        if isinstance(leaf, QuantizedLeaf):
+            if matched is None:
+                return QuantizedLeaf(P(), P(), leaf.kv_dtype, leaf.out_dtype)
+            return QuantizedLeaf(
+                _fit(matched, leaf.codes.shape, ax),
+                _fit((None, "model"), leaf.scales.shape, ax),
+                leaf.kv_dtype, leaf.out_dtype)
+        if matched is None or not hasattr(leaf, "shape"):
             return P()
         return _fit(matched, leaf.shape, ax)
 
-    return jax.tree_util.tree_map_with_path(spec, pcache, sa)
+    return jax.tree_util.tree_map_with_path(spec, sa, pcache)
 
 
 def pool_kv_cut(pool_specs, sa, tp: int, model_axis: str) -> int:
@@ -259,9 +273,17 @@ def pool_kv_cut(pool_specs, sa, tp: int, model_axis: str) -> int:
     replicated leaf would break per-shard byte exactness."""
     if tp <= 1:
         return 1
-    flags = jax.tree.map(
-        lambda sp, s_ax: (s_ax < 0) or (model_axis in tuple(sp)),
-        pool_specs, sa, is_leaf=lambda x: isinstance(x, P))
+
+    def cut(s_ax, sp):
+        if s_ax < 0:
+            return True
+        if isinstance(sp, QuantizedLeaf):
+            return (model_axis in tuple(sp.codes)
+                    and model_axis in tuple(sp.scales))
+        return model_axis in tuple(sp)
+
+    flags = jax.tree.map(cut, sa, pool_specs,
+                         is_leaf=lambda x: isinstance(x, P))
     return tp if all(jax.tree.leaves(flags)) else 1
 
 

@@ -87,7 +87,19 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len, *,
     counts run the unchanged grid on each shard's head-cut pool slice with
     no collective; an indivisible Hkv replicates heads and splits the page
     axis instead, merging partials in log-sum-exp space.  The jnp reference
-    needs no routing — XLA partitions it under GSPMD directly."""
+    needs no routing — XLA partitions it under GSPMD directly.
+
+    QUANTIZED pools arrive as ``QuantizedLeaf`` (int8/fp8 codes + per-page,
+    per-kv-head scales, DESIGN.md §13): both backends dequantize at
+    page-fetch time (the Pallas kernel via two extra scalar-prefetch
+    operands).  The TP shard-dispatch collectives are not scale-aware, so
+    quantized + tp>1 + Pallas falls back to the jnp reference, which GSPMD
+    partitions like any other program."""
+    from repro.core.quant import QuantizedLeaf
+    k_scale = v_scale = None
+    if isinstance(k_pool, QuantizedLeaf):
+        k_pool, k_scale = k_pool.codes, k_pool.scales
+        v_pool, v_scale = v_pool.codes, v_pool.scales
     if _dispatch(use_pallas):
         if model_axis is not None:
             from repro.distributed import collectives, runtime
@@ -96,6 +108,11 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len, *,
                   if mesh is not None and model_axis in mesh.axis_names
                   else 1)
             Hq, Hkv = q.shape[1], k_pool.shape[2]
+            if tp > 1 and k_scale is not None:
+                return ref.paged_decode_attention(
+                    q, k_pool, v_pool, page_table, cache_len, window=window,
+                    softcap=softcap, scale=scale, k_scale=k_scale,
+                    v_scale=v_scale)
             if tp > 1 and Hq % tp == 0:
                 if Hkv % tp == 0:
                     fn = collectives.tp_paged_decode_attention(
@@ -111,10 +128,12 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len, *,
         return _pa.paged_decode_attention(q, k_pool, v_pool, page_table,
                                           cache_len, window=window,
                                           softcap=softcap, scale=scale,
+                                          k_scale=k_scale, v_scale=v_scale,
                                           interpret=not _ON_TPU)
     return ref.paged_decode_attention(q, k_pool, v_pool, page_table,
                                       cache_len, window=window,
-                                      softcap=softcap, scale=scale)
+                                      softcap=softcap, scale=scale,
+                                      k_scale=k_scale, v_scale=v_scale)
 
 
 def chunk_attention(q, k_cache, v_cache, q_pos, *,

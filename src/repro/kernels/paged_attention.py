@@ -45,15 +45,23 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            *rest, scale: float, window: Optional[int],
+def _kernel(*refs, scale: float, window: Optional[int],
             softcap: Optional[float], ps: int, n_pages: int, group: int,
-            with_lse: bool = False):
+            quant: bool = False, with_lse: bool = False):
+    if quant:
+        # per-page, per-kv-head dequant scales ride as two extra
+        # scalar-prefetch operands (DESIGN.md §13) — grid unchanged
+        table_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref, \
+            *rest = refs
+    else:
+        table_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *rest = refs
+        ks_ref = vs_ref = None
     if with_lse:
         lse_ref, m_ref, l_ref, acc_ref = rest
     else:
         (m_ref, l_ref, acc_ref), lse_ref = rest, None
     b = pl.program_id(0)
+    h = pl.program_id(1)
     p = pl.program_id(2)
 
     @pl.when(p == 0)
@@ -76,6 +84,12 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)           # (group, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)     # (ps, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)     # (ps, D)
+        if ks_ref is not None:
+            # fused dequant: the fetched page block is int8/fp8 codes;
+            # multiply by this page×kv-head's scale before the softmax
+            pid = table_ref[b, p]
+            k = k * ks_ref[pid, h]
+            v = v * vs_ref[pid, h]
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
@@ -118,12 +132,21 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            scale: Optional[float] = None,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None,
                            interpret: bool = True,
                            return_lse: bool = False):
     """q (B, Hq, 1, D); pools (num_pages, page_size, Hkv, D);
     page_table (B, P) int32 physical page ids; cache_len (B,) valid lengths.
     Hq % Hkv == 0.  Token position t of slot b lives at
     ``(page_table[b, t // page_size], t % page_size)``.
+
+    ``k_scale``/``v_scale`` (num_pages, Hkv) f32 dequantize QUANTIZED pools
+    (int8/fp8 codes) at page-fetch time: they ride in as two more
+    scalar-prefetch operands and the kernel multiplies each fetched page
+    block by ``scale[table[b, p], h]`` before the online softmax — the
+    split-K grid structure is unchanged and the pages stream at 1 byte per
+    element (DESIGN.md §13).
 
     ``return_lse=True`` additionally returns the per-head log-sum-exp
     (B, Hkv, group) f32 of the computed logits, so partial results over a
@@ -135,29 +158,33 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     P = page_table.shape[1]
     group = Hq // Hkv
     s = scale if scale is not None else D ** -0.5
+    quant = k_scale is not None
     # GQA layout: the group dim rides inside the q/out block, so each KV
     # page is fetched once per KV head (not once per q head)
     qg = q[:, :, 0, :].reshape(B, Hkv, group, D)
 
+    # index maps take the scalar-prefetch refs as trailing args — varargs
+    # keeps one set of maps valid for both the 2- and 4-operand layouts
     out_specs = pl.BlockSpec((1, 1, group, D),
-                             lambda b, h, p, tbl, ln: (b, h, 0, 0))
+                             lambda b, h, p, *_: (b, h, 0, 0))
     out_shape = jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype)
     if return_lse:
         out_specs = [out_specs,
                      pl.BlockSpec((1, 1, group),
-                                  lambda b, h, p, tbl, ln: (b, h, 0))]
+                                  lambda b, h, p, *_: (b, h, 0))]
         out_shape = [out_shape,
                      jax.ShapeDtypeStruct((B, Hkv, group), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,            # page_table, cache_len
+        # page_table, cache_len (+ k/v page scales when quantized)
+        num_scalar_prefetch=4 if quant else 2,
         grid=(B, Hkv, P),
         in_specs=[
             pl.BlockSpec((1, 1, group, D),
-                         lambda b, h, p, tbl, ln: (b, h, 0, 0)),
+                         lambda b, h, p, *_: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
+                         lambda b, h, p, tbl, *_: (tbl[b, p], 0, h, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
+                         lambda b, h, p, tbl, *_: (tbl[b, p], 0, h, 0)),
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -166,17 +193,21 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
             pltpu.VMEM((group, D), jnp.float32),
         ],
     )
+    prefetch = (page_table.astype(jnp.int32),
+                jnp.asarray(cache_len, jnp.int32))
+    if quant:
+        prefetch += (k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32))
     out = pl.pallas_call(
         functools.partial(
             _kernel, scale=s, window=window, softcap=softcap, ps=ps,
-            n_pages=P, group=group, with_lse=return_lse),
+            n_pages=P, group=group, quant=quant, with_lse=return_lse),
         grid_spec=grid_spec,
         out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), jnp.asarray(cache_len, jnp.int32),
-      qg, k_pool, v_pool)
+    )(*prefetch, qg, k_pool, v_pool)
     if return_lse:
         out, lse = out
         return out.reshape(B, Hq, 1, D), lse

@@ -193,7 +193,9 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, page_table: jnp.ndarray,
                            cache_len, *, window: Optional[int] = None,
                            softcap: Optional[float] = None,
-                           scale: Optional[float] = None) -> jnp.ndarray:
+                           scale: Optional[float] = None,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Single-position attention computed THROUGH the page table.
 
     The gather-free oracle: a ``lax.scan`` over the page-table columns with
@@ -207,6 +209,12 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     the scratch page — masked positions never contribute); cache_len: (B,)
     valid lengths.  Token position t of slot b lives at
     ``(page_table[b, t // page_size], t % page_size)``.
+
+    ``k_scale``/``v_scale`` (num_pages, Hkv) f32, when given, dequantize a
+    QUANTIZED pool (int8/fp8 codes, DESIGN.md §13) at page-fetch time:
+    each fetched page block is multiplied by its per-page, per-kv-head
+    scale before entering the online softmax — the oracle for the fused
+    dequant in the Pallas kernel.
     """
     B, Hq, _, D = q.shape
     ps, Hkv = k_pool.shape[1], k_pool.shape[2]
@@ -221,6 +229,10 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
         pi, pid = inputs                     # page column index, (B,) phys ids
         kb = k_pool[pid].astype(jnp.float32)             # (B, ps, Hkv, D)
         vb = v_pool[pid].astype(jnp.float32)
+        if k_scale is not None:
+            kb = kb * k_scale[pid][:, None, :, None]     # (B,1,Hkv,1)
+        if v_scale is not None:
+            vb = vb * v_scale[pid][:, None, :, None]
         logits = jnp.einsum("bhgd,bshd->bhgs", qg, kb) * s
         logits = _soft_cap(logits, softcap)
         pos = pi * ps + jnp.arange(ps)                   # absolute positions

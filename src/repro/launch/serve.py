@@ -17,6 +17,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --page-size 8 --prefill-chunk 8 --prefix-cache on
 
+  # quantized KV pages: int8 (or fp8) codes + per-page scales, dequant
+  # fused into the decode kernel's page fetch (~2x resident tokens/byte)
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --continuous --page-size 8 --kv-dtype int8
+
   # online semantics: SLA classes, deadlines, SLA-aware preemption
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
       --continuous --page-size 8 --priority 0,0,0,1 --deadline-s 5 \
@@ -113,6 +118,13 @@ def main(argv=None):
                          "attention directly through the page table "
                          "(gather-free, no dense-view transient); 'gather' "
                          "keeps the dense-view fallback/oracle")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8", "fp8"),
+                    default="bf16",
+                    help="page-pool storage format (DESIGN.md §13): int8/fp8 "
+                         "pages quantize on write with per-page per-kv-head "
+                         "scales and dequantize inside the decode kernel's "
+                         "page fetch (~2x more resident tokens per pool "
+                         "byte); requires --page-size")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill width (interleaves prompt chunks "
                          "with decode steps; must divide max_len)")
@@ -161,6 +173,9 @@ def main(argv=None):
     if args.prefix_cache == "on" and args.page_size is None:
         ap.error("--prefix-cache on requires --page-size (the prefix index "
                  "shares pool pages)")
+    if args.kv_dtype != "bf16" and args.page_size is None:
+        ap.error("--kv-dtype int8/fp8 requires --page-size (quantization "
+                 "scales live per pool page)")
     if not args.continuous and (args.page_size is not None
                                 or args.num_pages is not None
                                 or args.prefill_chunk is not None):
@@ -212,7 +227,8 @@ def main(argv=None):
         eng = ServeEngine(cfg, params, mesh=mesh, max_len=max_len,
                           page_size=args.page_size, num_pages=args.num_pages,
                           paged_attn=args.paged_attn,
-                          prefix_cache=args.prefix_cache)
+                          prefix_cache=args.prefix_cache,
+                          kv_dtype=args.kv_dtype)
         lo = min(2, args.prompt_len)
         reqs = [Request(uid=i,
                         prompt=rng.integers(

@@ -148,6 +148,43 @@ def cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
 # (serve/pages.py re-exports this as the allocator's contract).
 SCRATCH_PAGE = 0
 
+# re-exported KV page-quantization vocabulary (core/quant.py owns it so the
+# kernel dispatcher can see QuantizedLeaf without an import cycle)
+QuantizedLeaf = quant.QuantizedLeaf
+KV_DTYPES = quant.KV_DTYPES
+KV_QMAX = quant.KV_QMAX
+
+
+def kv_pow2_scale(amax: jnp.ndarray, kv_dtype: str) -> jnp.ndarray:
+    """Smallest power-of-two scale s with ``amax/s <= qmax``.
+
+    Power-of-two scales make the page quantizer IDEMPOTENT: requantizing
+    already-roundtripped content lands on the same codes (int8: any page
+    whose ratio amax/s exceeded qmax/2 before rounding still exceeds it
+    after, so the exponent never drops), which is what lets shared prefix
+    pages quantize once and the prefix on/off token-identity survive
+    quantization (DESIGN.md §13)."""
+    qmax = KV_QMAX[kv_dtype]
+    amax = jnp.maximum(amax.astype(jnp.float32), 1e-30)
+    return jnp.exp2(jnp.ceil(jnp.log2(amax / qmax)))
+
+
+def kv_quantize(x: jnp.ndarray, scale: jnp.ndarray,
+                kv_dtype: str) -> jnp.ndarray:
+    """Encode f32 values into page codes under a (broadcastable) scale."""
+    y = x.astype(jnp.float32) / scale
+    if kv_dtype == "int8":
+        return jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return y.astype(KV_DTYPES[kv_dtype])
+
+
+def kv_dequantize(codes: jnp.ndarray, scale: jnp.ndarray,
+                  out_dtype=jnp.float32) -> jnp.ndarray:
+    """codes × scale.  Exact for both formats: |code| · 2^e products carry
+    at most 8 significant bits, so even a bfloat16 ``out_dtype`` holds them
+    without rounding — dequantized views are bit-stable."""
+    return (codes.astype(jnp.float32) * scale).astype(out_dtype)
+
 
 def page_offsets(table: jnp.ndarray, pos: jnp.ndarray, write: jnp.ndarray,
                  page_size: int):
@@ -163,18 +200,104 @@ def page_offsets(table: jnp.ndarray, pos: jnp.ndarray, write: jnp.ndarray,
     return jnp.where(write, page, SCRATCH_PAGE), pos % page_size
 
 
-def paged_cache_write(pool: jnp.ndarray, new: jnp.ndarray,
+def paged_cache_write(pool, new: jnp.ndarray,
                       table: jnp.ndarray, pos: jnp.ndarray,
-                      write: jnp.ndarray) -> jnp.ndarray:
+                      write: jnp.ndarray):
     """Append one token's K or V per slot directly into the page pool.
 
     pool: (num_pages, page_size, Hkv, D) — one layer's kernel-friendly pool
-    slice; new: (B, Hkv, 1, D); table: (B, P) physical page ids; pos: (B,)
-    write positions (== ``len``); write: (B,) bool — inactive slots land on
-    the scratch page so the program shape never depends on the active set.
-    O(B x token bytes) pool traffic: the in-place counterpart of
-    ``cache_write`` with no dense view in sight.
+    slice (or its :class:`QuantizedLeaf` counterpart, which routes to the
+    quantize-on-write append); new: (B, Hkv, 1, D); table: (B, P) physical
+    page ids; pos: (B,) write positions (== ``len``); write: (B,) bool —
+    inactive slots land on the scratch page so the program shape never
+    depends on the active set.  O(B x token bytes) pool traffic: the
+    in-place counterpart of ``cache_write`` with no dense view in sight.
     """
+    if isinstance(pool, QuantizedLeaf):
+        ps = pool.codes.shape[1]
+        page, off = page_offsets(table, pos, write, ps)
+        tok = new[:, :, 0, :]                          # (B, Hkv, D)
+        codes, scales = quant_page_append(pool.codes, pool.scales, tok,
+                                          page, off, pool.kv_dtype)
+        return QuantizedLeaf(codes, scales, pool.kv_dtype, pool.out_dtype)
     page, off = page_offsets(table, pos, write, pool.shape[1])
     tok = new[:, :, 0, :].astype(pool.dtype)           # (B, Hkv, D)
     return pool.at[page, off].set(tok)
+
+
+def quant_page_append(codes: jnp.ndarray, scales: jnp.ndarray,
+                      tok: jnp.ndarray, page: jnp.ndarray, off: jnp.ndarray,
+                      kv_dtype: str):
+    """The quantize-on-write page append core (DESIGN.md §13).
+
+    codes: (N, ps, *rest) pool codes in pages-leading layout; scales:
+    (N, *rest[:-1]) matching per-page scales (the trailing head_dim axis is
+    reduced away); tok: (B, *rest) the new token; page/off: (B,) resolved
+    write coordinates (``page_offsets``).  Decode-append must REQUANTIZE
+    the page — the incoming token can exceed the page's current range — so
+    the page is dequantized, the token inserted at ``off``, and the whole
+    page re-encoded under ``max(old_scale, needed)``:
+
+      * ``off == 0`` means a FRESH (or reused) page: the stale codes and
+        scale are dead, so the effective old scale is zeroed and positions
+        past ``off`` are masked out of the re-encode — a recycled page can
+        never leak a stale amax into the new sequence's scale;
+      * the scale is monotone within a page lifetime (never shrinks), so
+        already-written positions only ever requantize under an equal or
+        coarser power-of-two scale.
+
+    Returns ``(codes, scales)`` with the touched pages rewritten.  Both
+    scatters may hit duplicate indices only on the scratch page (inactive
+    slots), whose content is garbage by contract.
+    """
+    nd = codes.ndim
+    ps = codes.shape[1]
+    B = tok.shape[0]
+
+    def _x(s):  # (B, *rest[:-1]) -> broadcast over (B, ps, *rest)
+        return jnp.expand_dims(s, (1, nd - 1))
+
+    cp = codes[page]                                   # (B, ps, *rest)
+    sp = scales[page]                                  # (B, *rest[:-1])
+    fresh = (off > 0).reshape((B,) + (1,) * (sp.ndim - 1))
+    sp_eff = jnp.where(fresh, sp, 0.0)
+    old = cp.astype(jnp.float32) * _x(sp_eff)
+    idx = jnp.arange(ps)[None, :]
+    keep = (idx < off[:, None]).reshape((B, ps) + (1,) * (nd - 2))
+    ins = (idx == off[:, None]).reshape((B, ps) + (1,) * (nd - 2))
+    merged = jnp.where(keep, old, 0.0)
+    merged = jnp.where(ins, tok[:, None].astype(jnp.float32), merged)
+    amax = jnp.max(jnp.abs(merged), axis=(1, nd - 1))  # (B, *rest[:-1])
+    new_sc = jnp.maximum(sp_eff, kv_pow2_scale(amax, kv_dtype))
+    q = kv_quantize(merged, _x(new_sc), kv_dtype)
+    return codes.at[page].set(q), scales.at[page].set(new_sc)
+
+
+def fake_quant_pages(leaf: jnp.ndarray, s_ax: int, n_tokens,
+                     page_size: int, kv_dtype: str) -> jnp.ndarray:
+    """Round-trip the COMPLETED pages of a dense request-cache leaf through
+    the page quantizer (quantize→dequantize in place, dense dtype kept).
+
+    The prefix-cache identity glue (DESIGN.md §13): under a quantized pool,
+    a page's content is frozen at quantized precision the moment the page
+    completes during prefill, so the chunk stream attends to exactly the
+    values a later consumer will dequantize out of the shared page — the
+    prefix on/off token identity survives quantization.  ``n_tokens``
+    (traced) marks the filled length; only pages wholly below it round-trip
+    (the partial tail page stays dense until insertion).  Per-page scales
+    reduce over the within-page and trailing head_dim axes, matching the
+    pool layout's per-page × per-kv-head scale exactly, and the insert
+    quantizer reproduces the same codes from the roundtripped content
+    (power-of-two idempotence), so shared pages quantize ONCE.
+    """
+    S = leaf.shape[s_ax]
+    P = S // page_size
+    x = jnp.moveaxis(leaf, s_ax, 0)                    # (S, *rest)
+    xp = x.reshape((P, page_size) + x.shape[1:]).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xp), axis=(1, xp.ndim - 1), keepdims=True)
+    sc = kv_pow2_scale(amax, kv_dtype)
+    rt = kv_dequantize(kv_quantize(xp, sc, kv_dtype), sc)
+    done = (jnp.arange(P) < jnp.asarray(n_tokens, jnp.int32) // page_size)
+    rt = jnp.where(done.reshape((P,) + (1,) * (xp.ndim - 1)), rt, xp)
+    out = rt.reshape(x.shape).astype(leaf.dtype)
+    return jnp.moveaxis(out, 0, s_ax)

@@ -492,9 +492,13 @@ def paged_decode_step(params, cache, table, tokens: jnp.ndarray,
             x = _block_tail(pj, x, o, cfg)
             new_k.append(kc)
             new_v.append(vc)
+        # tree-map stack: quantized pool leaves are QuantizedLeaf pytrees
+        # (codes + scales stack independently); dense ring leaves are plain
+        # arrays and take the same path
+        stack = lambda xs: jax.tree.map(lambda *ls: jnp.stack(ls), *xs)
         upd = {
-            "k": [jnp.stack(new_k[s::P]) for s in range(P)],
-            "v": [jnp.stack(new_v[s::P]) for s in range(P)],
+            "k": [stack(new_k[s::P]) for s in range(P)],
+            "v": [stack(new_v[s::P]) for s in range(P)],
         }
         return x, upd
 

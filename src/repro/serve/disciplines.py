@@ -75,6 +75,14 @@ DISCIPLINES: Tuple[Discipline, ...] = (
         "token identity vs the uninterrupted run; pool occupancy back to "
         "baseline; recovery time bounded; zero recompiles on a repeat "
         "chaos cycle"),
+    Discipline(
+        "kv_quant",
+        "`paged` over an int8 page pool (DESIGN.md §13): 1-byte codes + "
+        "per-page, per-kv-head scales beside the page table, quantized on "
+        "write, dequantized inside the flash-decode page fetch",
+        ">= 1.8x resident tokens at fixed pool bytes; bounded per-step "
+        "greedy argmax flip rate vs bf16; non-KV traffic channels "
+        "byte-exact; zero steady-state recompiles"),
 )
 
 NAMES: Tuple[str, ...] = tuple(d.name for d in DISCIPLINES)

@@ -66,7 +66,8 @@ class ServeEngine(pages_mod.PagedEngineMixin):
     def __init__(self, cfg: ModelConfig, params, mesh=None, max_len: int = 128,
                  fused: bool = True, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 paged_attn: str = "inplace", prefix_cache: str = "off"):
+                 paged_attn: str = "inplace", prefix_cache: str = "off",
+                 kv_dtype: str = "bf16"):
         # Serve programs trace with exact_tp: every down-projection input is
         # gathered before its contraction (shd.pin_tp_exact), so the sharded
         # step is BITWISE identical to single-device greedy — the serve
@@ -109,6 +110,10 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                        if page_size is not None else None)
         self._paged_attn = self.check_paged_attn(paged_attn)
         self._prefix_cache_on = self.check_prefix_cache(prefix_cache)
+        # pool storage format (DESIGN.md §13): int8/fp8 pages quantize on
+        # write and dequantize inside the decode kernel's page fetch
+        self._kv_dtype = pages_mod.check_kv_dtype(kv_dtype, page_size)
+        self._fq_jit = None                    # post-prefill fake-quant pass
         self._paging_active = False            # set by init_slot_cache
         self._seq_ax = None
         self._paged_step = None
@@ -382,6 +387,11 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         ba, sa = self._slot_axes(), self._slot_seq_axes()
         self._note_slot_cache(n_slots, shape, ba, sa)
         if not self.will_page():
+            if self._kv_dtype != "bf16":
+                raise ValueError(
+                    f"kv_dtype={self._kv_dtype!r} requires a paging family: "
+                    f"no cache leaf of this config scales with max_len, so "
+                    f"there is no page pool to quantize")
             # recurrent/ring-only families have nothing that scales with
             # max_len: the page table is a no-op and the dense layout IS
             # the occupancy-proportional one — skip pool bookkeeping.
@@ -408,18 +418,23 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         # leaf whose Hkv the TP degree does not divide (the Hkv < tp
         # fallback), in which case the per-shard byte accounting stays 1-way
         pshape = pages_mod.pool_shape(shape, ba, sa, pool.num_pages,
-                                      self.page_size)
+                                      self.page_size, self._kv_dtype)
         pool_specs = shd.pool_pspecs(pshape, self._ragged_cfg, self.mesh, sa)
         self._pool_sh = shd.with_sharding(self.mesh, pool_specs)
         self._b1_sh = None
         self._b1_shardings()
         self._note_slot_cache(n_slots, shape, ba, sa,
                               self._kv_cut(pool_specs, sa))
+        self._kv_quant_tok_bytes = (
+            pages_mod.kv_token_bytes_quant(shape, ba, sa, self.page_size,
+                                           self._kv_dtype)
+            if self._kv_dtype != "bf16" else None)
         self._pager.prefix_on = self.prefix_sharing_active()
         with self.mesh:
             return pages_mod.make_pool(shape, ba, sa, pool.num_pages,
                                        self.page_size,
-                                       shardings=self._pool_sh)
+                                       shardings=self._pool_sh,
+                                       kv_dtype=self._kv_dtype)
 
     def _kv_cut(self, pool_specs, sa) -> int:
         return shd.pool_kv_cut(pool_specs, sa, self._tp,
@@ -452,7 +467,28 @@ class ServeEngine(pages_mod.PagedEngineMixin):
                 prefill = self._get_prefill(cache, width)
                 _, cache = prefill(self.params, cache, jnp.asarray(body),
                                    np.int32(T0 - 1))
+                if self._kv_dtype != "bf16":
+                    cache = self._fake_quant_b1(cache)
         return cache, int(prompt[-1])
+
+    def _fake_quant_b1(self, cache):
+        """Round-trip the completed pages of a B=1 request cache through the
+        page quantizer (pages_mod.fake_quant_tree): dense prefill values
+        become exactly the values pool insertion will store, so the decode
+        tokens that follow match the quantized pool bit-for-bit — the knob's
+        token-identity story for prefix on/off (DESIGN.md §13)."""
+        if self._fq_jit is None:
+            sa = self._slot_seq_axes()
+            ps, kvd = self.page_size, self._kv_dtype
+
+            def fq(cache):
+                return pages_mod.fake_quant_tree(cache, cache["len"][0], sa,
+                                                 ps, kvd)
+
+            b1_sh = self._b1_shardings()
+            self._fq_jit = jax.jit(fq, donate_argnums=(0,),
+                                   in_shardings=(b1_sh,), out_shardings=b1_sh)
+        return self._fq_jit(cache)
 
     def new_request_cache(self):
         """Fresh B=1 cache for chunked prefill (slot-shaped, empty)."""
@@ -485,10 +521,19 @@ class ServeEngine(pages_mod.PagedEngineMixin):
         pages_mod.check_chunk_width(W, self.max_len)
         if W not in self._chunk_jit:
             block = self._chunk_block_ok
+            sa = self._slot_seq_axes()
+            ps, kvd = self.page_size, self._kv_dtype
 
             def chunk_fn(params, cache, tokens, true_len):
-                return api.prefill_chunk(params, cache, tokens, true_len,
-                                         self.cfg, block=block)
+                cache = api.prefill_chunk(params, cache, tokens, true_len,
+                                          self.cfg, block=block)
+                if kvd != "bf16":
+                    # fused fake-quant (DESIGN.md §13): completed pages
+                    # round-trip through the page quantizer so the next
+                    # chunk attends to exactly what the pool will store
+                    cache = pages_mod.fake_quant_tree(cache, cache["len"][0],
+                                                      sa, ps, kvd)
+                return cache
 
             b1_sh = self._b1_shardings()
             self._chunk_jit[W] = jax.jit(

@@ -82,14 +82,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import SCRATCH_PAGE, page_offsets
+from repro.models.layers import (KV_DTYPES, QuantizedLeaf, SCRATCH_PAGE,
+                                 fake_quant_pages, kv_pow2_scale,
+                                 kv_quantize, page_offsets,
+                                 quant_page_append)
 from repro.serve.errors import PageLifecycleError, ReservationError
 
 __all__ = [
     "PagePool",
     "HostPager",
     "PagedEngineMixin",
+    "QuantizedLeaf",
     "check_chunk_width",
+    "check_kv_dtype",
     "round_len",
     "seq_axes",
     "page_axis",
@@ -99,11 +104,28 @@ __all__ = [
     "gather_tree",
     "scatter_token_tree",
     "insert_tree",
+    "fake_quant_tree",
     "pool_bytes",
     "page_token_bytes",
     "kv_token_bytes",
+    "kv_token_bytes_quant",
     "SCRATCH_PAGE",
 ]
+
+
+def check_kv_dtype(kv_dtype: str, page_size) -> str:
+    """Validate the engines' ``kv_dtype`` knob: quantized pools exist only
+    in the paged layout (per-PAGE scales need pages), so anything but the
+    identity "bf16" requires ``page_size``."""
+    if kv_dtype not in ("bf16",) + tuple(KV_DTYPES):
+        raise ValueError(
+            f"kv_dtype must be one of 'bf16', "
+            f"{', '.join(repr(k) for k in KV_DTYPES)}, got {kv_dtype!r}")
+    if kv_dtype != "bf16" and page_size is None:
+        raise ValueError(
+            f"kv_dtype={kv_dtype!r} quantizes the PAGE pool (per-page "
+            f"scales) — pass page_size to enable the paged layout")
+    return kv_dtype
 
 
 def check_chunk_width(width: int, max_len: int) -> None:
@@ -595,6 +617,10 @@ class HostPager:
             "cache_bytes": total,
             "page_size": self.page_size,
             "num_pages": self.pool.num_pages,
+            # dtype-aware: pool_bytes/page_bytes come from the leaves'
+            # actual nbytes (quantized codes + scales included), not page
+            # counts x a dense assumption
+            "pool_bytes": pool_bytes(cache, sa),
             "page_bytes": page_bytes,
             "pages_in_use": self.pool.pages_in_use,
             "peak_pages_in_use": self.pool.peak_pages_in_use,
@@ -660,6 +686,8 @@ class PagedEngineMixin:
     _seed_jit = None
     _cow_jit = None
     _kv_tok_bytes: int = 0       # per-token-per-slot seq-scaling cache bytes
+    _kv_quant_tok_bytes: Optional[float] = None  # quantized-pool figure
+    _kv_dtype: str = "bf16"      # pool storage format (engines override)
     _kv_shards: int = 1          # TP head cut of the pool (1 = replicated)
     _slot_count: int = 0
     # TP serving mesh placements (None = single-device / unspecified): the
@@ -722,10 +750,23 @@ class PagedEngineMixin:
             ax >= 0 or _is_len_path(path) for path, ax in leaves)
 
     # ------------------------------------------------ host KV-read accounting
+    def _kv_bytes(self, tokens) -> int:
+        """KV bytes ``tokens`` token-positions occupy in the slot cache's
+        STORAGE format: the quantized per-token figure (1-byte codes plus
+        page-amortized scales — ``kv_token_bytes_quant``) when the pool is
+        quantized, the dense figure otherwise.  Every host_read channel
+        that reads or copies POOL bytes routes through here, so quantizing
+        the pool shrinks the measured KV traffic accordingly."""
+        if self._kv_quant_tok_bytes is not None:
+            return int(round(tokens * self._kv_quant_tok_bytes))
+        return int(tokens * self._kv_tok_bytes)
+
     def _dense_view_read_bytes(self) -> int:
         """Bytes one masked decode step reads through a dense (or gathered)
         ``(max_slots, ..., max_len, ...)`` KV view: every slot's full
-        allocation, live or not."""
+        allocation, live or not.  Deliberately the DENSE figure even under
+        a quantized pool — the gather discipline materializes and reads the
+        dequantized dense-view transient."""
         return self._slot_count * self.max_len * self._kv_tok_bytes
 
     def kv_read_bytes_step(self, active: np.ndarray) -> int:
@@ -743,7 +784,7 @@ class PagedEngineMixin:
             ps = self._pager.page_size
             lens = self._pager.host_len + np.asarray(active, bool)
             pages_touched = int(-((lens[lens > 0]) // -ps).sum())
-            return pages_touched * ps * self._kv_tok_bytes
+            return self._kv_bytes(pages_touched * ps)
         return self._dense_view_read_bytes()
 
     def _meter_kv_read(self, active: np.ndarray) -> None:
@@ -772,19 +813,20 @@ class PagedEngineMixin:
         their mesh context where needed."""
         self._pager.note_insert(slot, n_tokens)
         if self._paged_insert_jit is None:
-            def insert(pcache, single, row, s):
-                return insert_tree(pcache, single, row, s, ba, sa)
+            def insert(pcache, single, row, s, n):
+                return insert_tree(pcache, single, row, s, ba, sa,
+                                   n_tokens=n)
 
             kw = {}
             if self._pool_sh is not None:
                 kw = dict(in_shardings=(self._pool_sh, self._b1_sh,
-                                        None, None),
+                                        None, None, None),
                           out_shardings=self._pool_sh)
             self._paged_insert_jit = jax.jit(insert, donate_argnums=(0,),
                                              **kw)
         return self._paged_insert_jit(batched_cache, single_cache,
                                       self._pager.insert_row(slot),
-                                      jnp.int32(slot))
+                                      jnp.int32(slot), jnp.int32(n_tokens))
 
     # ------------------------------------------------- shared-prefix KV reuse
     def prefix_cache_armed(self) -> bool:
@@ -815,9 +857,11 @@ class PagedEngineMixin:
             chunk if self.prefix_sharing_active() else None)
         if cached:
             # host-local accounting channel (excluded from eq. 7-10): the
-            # prefill KV bytes the prefix hit did NOT recompute/store
+            # prefill KV bytes the prefix hit did NOT recompute/store —
+            # measured in the pool's STORAGE format (quantized pools save
+            # quantized bytes)
             self.meter.host_read("prefix_prefill_saved",
-                                 cached * self._kv_tok_bytes)
+                                 self._kv_bytes(cached))
         return cached
 
     def publish_prefix(self, slot: int, prompt: np.ndarray) -> None:
@@ -867,21 +911,32 @@ class PagedEngineMixin:
             return cache
         if self._cow_jit is None:
             def copy(pcache, src, dst):
-                def leaf(p, b_ax, s_ax):
+                def leaf(b_ax, s_ax, p):
                     if s_ax < 0:
                         return p
+                    if isinstance(p, QuantizedLeaf):
+                        # scales travel with their page: a CoW'd page keeps
+                        # encoding the same values in its private copy
+                        cl = _pages_leading(p.codes, b_ax, s_ax)
+                        sl = _scales_leading(p.scales, b_ax, s_ax)
+                        return QuantizedLeaf(
+                            _pages_restore(cl.at[dst].set(cl[src]),
+                                           b_ax, s_ax),
+                            _scales_restore(sl.at[dst].set(sl[src]),
+                                            b_ax, s_ax),
+                            p.kv_dtype, p.out_dtype)
                     pl = _pages_leading(p, b_ax, s_ax)
                     pl = pl.at[dst].set(pl[src])
                     return _pages_restore(pl, b_ax, s_ax)
 
-                return jax.tree.map(leaf, pcache, ba, sa)
+                return jax.tree.map(leaf, ba, sa, pcache)
 
             kw = {}
             if self._pool_sh is not None:
                 kw = dict(in_shardings=(self._pool_sh, None, None),
                           out_shardings=self._pool_sh)
             self._cow_jit = jax.jit(copy, donate_argnums=(0,), **kw)
-        page_bytes = self._kv_tok_bytes * self._pager.page_size
+        page_bytes = self._kv_bytes(self._pager.page_size)
         for src, dst in copies:
             cache = self._cow_jit(cache, jnp.int32(src), jnp.int32(dst))
             self.meter.host_read("page_cow_copy", page_bytes)
@@ -939,6 +994,13 @@ class PagedEngineMixin:
         stats["kv_shards"] = self._kv_shards
         stats["kv_token_bytes_per_shard"] = (
             self._kv_tok_bytes // self._kv_shards)
+        # dtype-aware capacity accounting (DESIGN.md §13): pool bytes and
+        # the per-token STORAGE cost in the pool's actual format, so the
+        # serve_bench resident-token gate is checkable from the artifact
+        stats["kv_dtype"] = self._kv_dtype
+        stats["kv_token_bytes_stored"] = (
+            self._kv_quant_tok_bytes if self._kv_quant_tok_bytes is not None
+            else self._kv_tok_bytes)
         return stats
 
 
@@ -988,31 +1050,43 @@ def _pages_restore(pool: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
 
 
 def pool_shape(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
-               page_size: int) -> Any:
+               page_size: int, kv_dtype: str = "bf16") -> Any:
     """ShapeDtypeStruct pytree of the paged slot cache (``make_pool``
     without the allocation) — what the sharding rules and eval_shape-based
-    plumbing consume."""
+    plumbing consume.  With ``kv_dtype`` other than "bf16" every pool leaf
+    becomes a :class:`QuantizedLeaf`: codes in the pool layout at the
+    quantized dtype plus per-page × per-kv-head float32 scales (the pool
+    shape minus the ``page_size`` axis and the trailing head_dim axis)."""
     def leaf(a, b_ax, s_ax):
         if s_ax < 0:
             return jax.ShapeDtypeStruct(a.shape, a.dtype)
         rest = tuple(d for i, d in enumerate(a.shape) if i not in (b_ax, s_ax))
         pax = page_axis(b_ax, s_ax)
-        return jax.ShapeDtypeStruct(
-            rest[:pax] + (num_pages, page_size) + rest[pax:], a.dtype)
+        shape = rest[:pax] + (num_pages, page_size) + rest[pax:]
+        if kv_dtype == "bf16":
+            return jax.ShapeDtypeStruct(shape, a.dtype)
+        sc_shape = shape[:pax + 1] + shape[pax + 2:-1]
+        return QuantizedLeaf(
+            jax.ShapeDtypeStruct(shape, KV_DTYPES[kv_dtype]),
+            jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            kv_dtype, jnp.dtype(a.dtype).name)
 
     return jax.tree.map(leaf, cache_shape, ba, sa)
 
 
 def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
-              page_size: int, shardings: Any = None) -> Any:
+              page_size: int, shardings: Any = None,
+              kv_dtype: str = "bf16") -> Any:
     """Allocate the paged slot cache: pool layout for paging leaves, dense
     ``(max_slots, ...)`` zeros for everything else.  Same pytree structure
-    as the dense cache, so engines keep one cache object either way.
+    as the dense cache, so engines keep one cache object either way
+    (quantized pools substitute a :class:`QuantizedLeaf` per pool leaf —
+    a registered pytree node, so the structure contract still holds).
 
     ``shardings`` (optional) is a matching pytree of ``jax.sharding``
     placements — the TP serving mesh allocates each pool leaf directly in
     its head-cut layout, so no full replica ever materializes."""
-    shapes = pool_shape(cache_shape, ba, sa, num_pages, page_size)
+    shapes = pool_shape(cache_shape, ba, sa, num_pages, page_size, kv_dtype)
     if shardings is None:
         return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), shapes)
     return jax.tree.map(lambda a, sh: jnp.zeros(a.shape, a.dtype, device=sh),
@@ -1020,9 +1094,10 @@ def make_pool(cache_shape: Any, ba: Any, sa: Any, num_pages: int,
 
 
 def pool_bytes(pcache: Any, sa: Any) -> int:
-    """Resident bytes of the pool leaves (the paged share of the cache)."""
-    sizes = jax.tree.map(lambda a, s_ax: int(a.nbytes) if s_ax >= 0 else 0,
-                         pcache, sa)
+    """Resident bytes of the pool leaves (the paged share of the cache) —
+    dtype-aware: a quantized leaf counts its codes AND scale arrays."""
+    sizes = jax.tree.map(lambda s_ax, a: int(a.nbytes) if s_ax >= 0 else 0,
+                         sa, pcache)
     return sum(jax.tree.leaves(sizes))
 
 
@@ -1065,16 +1140,59 @@ def kv_token_bytes(cache_shape: Any, ba: Any, sa: Any,
     return total
 
 
+def kv_token_bytes_quant(cache_shape: Any, ba: Any, sa: Any,
+                         page_size: int, kv_dtype: str) -> float:
+    """Per-token bytes of the QUANTIZED pool leaves (DESIGN.md §13): the
+    1-byte codes plus the per-page × per-kv-head float32 scales amortized
+    over ``page_size`` token positions.  From the DENSE cache shapes, like
+    :func:`kv_token_bytes` — may be fractional (the scale amortization),
+    so callers round at the meter boundary (``PagedEngineMixin._kv_bytes``).
+    """
+    itemsize = jnp.dtype(KV_DTYPES[kv_dtype]).itemsize
+
+    def per_tok(a, b_ax, s_ax):
+        if s_ax < 0:
+            return 0.0
+        n = int(math.prod(a.shape)) // (a.shape[b_ax] * a.shape[s_ax])
+        return n * itemsize + (n // a.shape[-1]) * 4.0 / int(page_size)
+
+    sizes = jax.tree.map(per_tok, cache_shape, ba, sa)
+    return float(sum(jax.tree.leaves(sizes)))
+
+
 # ----------------------------------------------------------------------------
 # Traced page-table ops (fixed shapes, traced indices — compile once)
 # ----------------------------------------------------------------------------
-def gather_view(pool: jnp.ndarray, table: jnp.ndarray, b_ax: int,
+def _scales_leading(scales: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
+    """View a scale array with its page axis leading (scales have no
+    page_size axis, so only one move)."""
+    return jnp.moveaxis(scales, page_axis(b_ax, s_ax), 0)
+
+
+def _scales_restore(scales: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
+    return jnp.moveaxis(scales, 0, page_axis(b_ax, s_ax))
+
+
+def gather_view(pool, table: jnp.ndarray, b_ax: int,
                 s_ax: int) -> jnp.ndarray:
     """Reassemble one paged leaf into its dense ``(..., B, ..., S, ...)``
     view through the page table ``(B, P)``.  This materializes the
     O(B x max_len) transient the in-place paged attention path exists to
-    avoid — fallback/oracle only (DESIGN.md §6)."""
+    avoid — fallback/oracle and prefix-seed only (DESIGN.md §6).
+
+    A :class:`QuantizedLeaf` gathers codes and scales together and
+    DEQUANTIZES: power-of-two scales make the product exact even in a
+    bfloat16 ``out_dtype`` (layers.kv_dequantize), so the dense view is
+    bit-stable — the prefix seed path depends on that."""
     B, P = table.shape
+    if isinstance(pool, QuantizedLeaf):
+        cl = _pages_leading(pool.codes, b_ax, s_ax)    # (N, ps, *rest)
+        sl = _scales_leading(pool.scales, b_ax, s_ax)  # (N, *rest[:-1])
+        g = cl[table]                                  # (B, P, ps, *rest)
+        gs = jnp.expand_dims(sl[table], (2, sl.ndim + 2))
+        d = (g.astype(jnp.float32) * gs).astype(jnp.dtype(pool.out_dtype))
+        d = d.reshape((B, P * cl.shape[1]) + cl.shape[2:])
+        return jnp.moveaxis(d, (0, 1), (b_ax, s_ax))
     p = _pages_leading(pool, b_ax, s_ax)               # (N, ps, *rest)
     ps = p.shape[1]
     g = p[table]                                       # (B, P, ps, *rest)
@@ -1084,11 +1202,12 @@ def gather_view(pool: jnp.ndarray, table: jnp.ndarray, b_ax: int,
 
 def gather_tree(pcache: Any, table: jnp.ndarray, ba: Any, sa: Any) -> Any:
     """Dense-view pytree: paged leaves gathered, dense leaves passed through.
-    The result is exactly the cache pytree the family decode_step expects."""
+    The result is exactly the cache pytree the family decode_step expects.
+    (``ba`` leads the tree.map so quantized pool subtrees arrive whole.)"""
     return jax.tree.map(
-        lambda p, b_ax, s_ax: p if s_ax < 0
+        lambda b_ax, s_ax, p: p if s_ax < 0
         else gather_view(p, table, b_ax, s_ax),
-        pcache, ba, sa)
+        ba, sa, pcache)
 
 
 def _take_token(leaf: jnp.ndarray, pos: jnp.ndarray, b_ax: int,
@@ -1103,11 +1222,23 @@ def _take_token(leaf: jnp.ndarray, pos: jnp.ndarray, b_ax: int,
     return jnp.moveaxis(tok, b_ax - (1 if s_ax < b_ax else 0), 0)
 
 
-def scatter_token(pool: jnp.ndarray, table: jnp.ndarray,
+def scatter_token(pool, table: jnp.ndarray,
                   new_leaf: jnp.ndarray, pos: jnp.ndarray,
-                  write: jnp.ndarray, b_ax: int, s_ax: int) -> jnp.ndarray:
+                  write: jnp.ndarray, b_ax: int, s_ax: int):
     """Write each active slot's token at ``pos[b]`` from the updated dense
-    view back into its page; inactive slots land on the scratch page."""
+    view back into its page; inactive slots land on the scratch page.
+    Quantized pools route through the shared quantize-on-write append core
+    (``layers.quant_page_append``) so the gather discipline's writeback and
+    the in-place append encode pages identically."""
+    if isinstance(pool, QuantizedLeaf):
+        cl = _pages_leading(pool.codes, b_ax, s_ax)
+        sl = _scales_leading(pool.scales, b_ax, s_ax)
+        tok = _take_token(new_leaf, pos, b_ax, s_ax)   # (B, *rest)
+        page, off = page_offsets(table, pos, write, cl.shape[1])
+        cl, sl = quant_page_append(cl, sl, tok, page, off, pool.kv_dtype)
+        return QuantizedLeaf(_pages_restore(cl, b_ax, s_ax),
+                             _scales_restore(sl, b_ax, s_ax),
+                             pool.kv_dtype, pool.out_dtype)
     p = _pages_leading(pool, b_ax, s_ax)
     tok = _take_token(new_leaf, pos, b_ax, s_ax)       # (B, *rest)
     page, off = page_offsets(table, pos, write, p.shape[1])
@@ -1122,9 +1253,9 @@ def scatter_token_tree(pcache: Any, new_view: Any, table: jnp.ndarray,
     ``pos`` scattered into their page, dense leaves take the (already
     slot-masked) updated view wholesale."""
     return jax.tree.map(
-        lambda p, n, b_ax, s_ax: n if s_ax < 0
+        lambda b_ax, s_ax, n, p: n if s_ax < 0
         else scatter_token(p, table, n, pos, write, b_ax, s_ax),
-        pcache, new_view, ba, sa)
+        ba, sa, new_view, pcache)
 
 
 def _dense_to_pages(leaf: jnp.ndarray, b_ax: int, s_ax: int,
@@ -1136,18 +1267,61 @@ def _dense_to_pages(leaf: jnp.ndarray, b_ax: int, s_ax: int,
 
 
 def insert_tree(pcache: Any, single: Any, table_row: jnp.ndarray,
-                slot: jnp.ndarray, ba: Any, sa: Any) -> Any:
+                slot: jnp.ndarray, ba: Any, sa: Any,
+                n_tokens: Optional[jnp.ndarray] = None) -> Any:
     """Admit one prefilled B=1 dense cache: paged leaves scatter their page
     blocks to the slot's physical pages (excess logical pages hit scratch),
     dense leaves do the ordinary slot insert.  ``table_row``/``slot`` are
-    traced — ONE compiled program covers every slot and page assignment."""
-    def leaf(p, s, b_ax, s_ax):
+    traced — ONE compiled program covers every slot and page assignment.
+
+    ``n_tokens`` (traced; required for quantized pools) is the prefilled
+    length: positions at or past it are GARBAGE the prefill bucketing wrote
+    past the prompt, and the quantizer zeroes them before computing the
+    per-page scale — otherwise a junk amax in the tail page would coarsen
+    the scale of real content (and break the scale agreement with
+    ``layers.fake_quant_pages``, which sees only valid positions)."""
+    def leaf(b_ax, s_ax, s, p):
         if s_ax < 0:
             return jax.lax.dynamic_update_slice_in_dim(
                 p, s.astype(p.dtype), slot, axis=b_ax)
+        if isinstance(p, QuantizedLeaf):
+            cl = _pages_leading(p.codes, b_ax, s_ax)
+            sl = _scales_leading(p.scales, b_ax, s_ax)
+            ps = cl.shape[1]
+            blocks = _dense_to_pages(s, b_ax, s_ax, ps)    # (P, ps, *rest)
+            P = blocks.shape[0]
+            pos = (jnp.arange(P) * ps)[:, None] + jnp.arange(ps)[None, :]
+            valid = pos < jnp.asarray(n_tokens, jnp.int32)
+            blocks = jnp.where(
+                valid.reshape((P, ps) + (1,) * (blocks.ndim - 2)),
+                blocks.astype(jnp.float32), 0.0)
+            amax = jnp.max(jnp.abs(blocks), axis=(1, blocks.ndim - 1))
+            sc = kv_pow2_scale(amax, p.kv_dtype)           # (P, *rest[:-1])
+            q = kv_quantize(
+                blocks, jnp.expand_dims(sc, (1, blocks.ndim - 1)),
+                p.kv_dtype)
+            cl = cl.at[table_row].set(q)
+            sl = sl.at[table_row].set(sc)
+            return QuantizedLeaf(_pages_restore(cl, b_ax, s_ax),
+                                 _scales_restore(sl, b_ax, s_ax),
+                                 p.kv_dtype, p.out_dtype)
         pl = _pages_leading(p, b_ax, s_ax)
         blocks = _dense_to_pages(s, b_ax, s_ax, pl.shape[1])
         pl = pl.at[table_row].set(blocks.astype(p.dtype))
         return _pages_restore(pl, b_ax, s_ax)
 
-    return jax.tree.map(leaf, pcache, single, ba, sa)
+    return jax.tree.map(leaf, ba, sa, single, pcache)
+
+
+def fake_quant_tree(cache: Any, n_tokens, sa: Any, page_size: int,
+                    kv_dtype: str) -> Any:
+    """Round-trip the completed pages of a dense B=1 request cache through
+    the page quantizer (``layers.fake_quant_pages`` per paging leaf; dense
+    leaves untouched).  Both engines apply this after every prefill /
+    prefill chunk when the pool is quantized, so the chunk stream attends
+    to exactly the values insertion will store — the prefix on/off token
+    identity survives quantization (DESIGN.md §13)."""
+    return jax.tree.map(
+        lambda s_ax, x: x if s_ax < 0
+        else fake_quant_pages(x, s_ax, n_tokens, page_size, kv_dtype),
+        sa, cache)

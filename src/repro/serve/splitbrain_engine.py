@@ -67,7 +67,7 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                  use_pallas: bool = False, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  paged_attn: str = "inplace", prefix_cache: str = "off",
-                 mesh=None):
+                 kv_dtype: str = "bf16", mesh=None):
         if cfg.family != "lm" or len(cfg.layer_pattern) != 1:
             raise ValueError(
                 "split-brain reference engine covers the paper's LM configs")
@@ -136,6 +136,9 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
                        if page_size is not None else None)
         self._paged_attn = self.check_paged_attn(paged_attn)
         self._prefix_cache_on = self.check_prefix_cache(prefix_cache)
+        # pool storage format (DESIGN.md §13): int8/fp8 pages quantize on
+        # write and dequantize at the attention page fetch
+        self._kv_dtype = pages_mod.check_kv_dtype(kv_dtype, page_size)
         self._paging_active = self._pager is not None   # k/v always page
         self._paged_step = None
         self._b1_shape = None                  # B=1 request-cache eval_shape
@@ -573,17 +576,22 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
         # not divide auto-replicates (the Hkv < tp fallback) and the
         # per-shard byte accounting stays 1-way.
         pshape = pages_mod.pool_shape(shape, ba, sa, pool.num_pages,
-                                      self.page_size)
+                                      self.page_size, self._kv_dtype)
         pool_specs = shd.pool_pspecs(pshape, self.cfg, self.mesh, sa)
         self._pool_sh = shd.with_sharding(self.mesh, pool_specs)
         self._b1_sh = self._cache_shardings(1)
         self._note_slot_cache(n_slots, shape, ba, sa,
                               shd.pool_kv_cut(pool_specs, sa, self._tp,
                                               self.cfg.parallel.model_axis))
+        self._kv_quant_tok_bytes = (
+            pages_mod.kv_token_bytes_quant(shape, ba, sa, self.page_size,
+                                           self._kv_dtype)
+            if self._kv_dtype != "bf16" else None)
         with self.mesh:
             return pages_mod.make_pool(shape, ba, sa, pool.num_pages,
                                        self.page_size,
-                                       shardings=self._pool_sh)
+                                       shardings=self._pool_sh,
+                                       kv_dtype=self._kv_dtype)
 
     # reserve_slot / can_ever_admit / free_slot / cache_stats come from
     # pages_mod.PagedEngineMixin.
@@ -652,6 +660,14 @@ class SplitBrainEngine(pages_mod.PagedEngineMixin):
 
             (k, v, ln), _ = jax.lax.scan(body, (k, v, ln),
                                          jnp.arange(width))
+            if self._kv_dtype != "bf16":
+                # fused fake-quant (DESIGN.md §13): completed pages
+                # round-trip through the page quantizer, so the chunk
+                # stream attends to exactly what pool insertion will store
+                c = pages_mod.fake_quant_tree(
+                    {"k": k, "v": v}, ln[0], {"k": 3, "v": 3},
+                    self.page_size, self._kv_dtype)
+                k, v = c["k"], c["v"]
             return k, v, ln
 
         b1 = self._cache_shardings(1)

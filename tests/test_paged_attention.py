@@ -94,6 +94,78 @@ def test_oracle_never_reads_unallocated_pages():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
 
 
+# -------------------------------------------- quantized pools (DESIGN.md §13)
+def _quantize(pool, kv_dtype):
+    """Reference whole-pool quantizer: per-page, per-kv-head pow2 scales."""
+    from repro.core.quant import QuantizedLeaf
+    from repro.models.layers import kv_pow2_scale, kv_quantize
+    amax = jnp.max(jnp.abs(pool), axis=(1, 3))
+    sc = kv_pow2_scale(amax, kv_dtype)
+    codes = kv_quantize(pool, sc[:, None, :, None], kv_dtype)
+    return QuantizedLeaf(codes, sc, kv_dtype, "float32")
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_quant_oracle_matches_dequantized_dense(case):
+    """ref oracle with k_scale/v_scale == dense softmax over the explicitly
+    dequantized view: fused dequant changes where the multiply happens,
+    not the math."""
+    B, Hq, Hkv, D, ps, P, window, softcap = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    q, kp, vp, table, lens, _, _ = _rand_paged(rng, B, Hq, Hkv, D, ps, P)
+    kq, vq = _quantize(kp, "int8"), _quantize(vp, "int8")
+    deq = lambda z: (z.codes.astype(jnp.float32)
+                     * z.scales[:, None, :, None])
+    dk = jnp.asarray(np.asarray(deq(kq))[np.asarray(table)]
+                     .reshape(B, P * ps, Hkv, D).transpose(0, 2, 1, 3))
+    dv = jnp.asarray(np.asarray(deq(vq))[np.asarray(table)]
+                     .reshape(B, P * ps, Hkv, D).transpose(0, 2, 1, 3))
+    want = ref.decode_attention(q, dk, dv, lens, window=window,
+                                softcap=softcap)
+    got = ref.paged_decode_attention(q, kq.codes, vq.codes, table, lens,
+                                     window=window, softcap=softcap,
+                                     k_scale=kq.scales, v_scale=vq.scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quant_ops_dispatch_unpacks_quantized_leaf(kv_dtype):
+    """ops.paged_decode_attention accepts QuantizedLeaf pools directly and
+    routes the scales to whichever backend runs."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(7)
+    q, kp, vp, table, lens, _, _ = _rand_paged(rng, 2, 4, 2, 16, 8, 3)
+    kq, vq = _quantize(kp, kv_dtype), _quantize(vp, kv_dtype)
+    want = ref.paged_decode_attention(q, kq.codes, vq.codes, table, lens,
+                                      k_scale=kq.scales, v_scale=vq.scales)
+    got = ops.paged_decode_attention(q, kq, vq, table, lens,
+                                     use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", CASES)
+def test_quant_pallas_kernel_matches_oracle(case):
+    """The fused-dequant Pallas kernel (scales as scalar-prefetch operands
+    3/4, per-page multiply at fetch) vs the scaled oracle — page sizes
+    {1, odd, 8}, GQA/MQA, window, softcap, all on int8 pools."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    B, Hq, Hkv, D, ps, P, window, softcap = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    q, kp, vp, table, lens, _, _ = _rand_paged(rng, B, Hq, Hkv, D, ps, P)
+    kq, vq = _quantize(kp, "int8"), _quantize(vp, "int8")
+    want = ref.paged_decode_attention(q, kq.codes, vq.codes, table, lens,
+                                      window=window, softcap=softcap,
+                                      k_scale=kq.scales, v_scale=vq.scales)
+    got = paged_decode_attention(q, kq.codes, vq.codes, table, lens,
+                                 window=window, softcap=softcap,
+                                 k_scale=kq.scales, v_scale=vq.scales,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-5)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("case", CASES)
 def test_pallas_kernel_matches_oracle(case):

@@ -273,3 +273,136 @@ def test_make_pool_kernel_friendly_layout():
     assert pool["len"].shape == (3,)
     assert pages.page_axis(1, 3) == 1
     assert pages.page_axis(2, 0) == 1             # seq axis before batch
+
+
+# ------------------------------------------------ quantized pools (§13)
+def _quant_shape(B=1, Hkv=2, S=24, hd=16, L=3):
+    """KV-like leaf (L, B, Hkv, S, hd) with ba=1, sa=3 plus a dense len."""
+    shape = {"k": jax.ShapeDtypeStruct((L, B, Hkv, S, hd), jnp.bfloat16),
+             "len": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    return shape, {"k": 1, "len": 0}, {"k": 3, "len": -1}
+
+
+def test_quant_pool_scale_shape_per_page_and_kv_head():
+    """The scale array drops exactly the within-page and head_dim axes:
+    one f32 scale per (lead, page, kv-head), rest of the layout intact."""
+    shape, ba, sa = _quant_shape()
+    pool = pages.make_pool(shape, ba, sa, num_pages=7, page_size=4,
+                           kv_dtype="int8")
+    leaf = pool["k"]
+    assert isinstance(leaf, pages.QuantizedLeaf)
+    assert leaf.codes.shape == (3, 7, 4, 2, 16)   # (L, N, ps, Hkv, hd)
+    assert leaf.codes.dtype == jnp.int8
+    assert leaf.scales.shape == (3, 7, 2)         # (L, N, Hkv)
+    assert leaf.scales.dtype == jnp.float32
+    assert leaf.dtype == jnp.int8 and leaf.out_dtype == "bfloat16"
+    assert pool["len"].shape == (1,)              # dense leaves untouched
+    # dtype-aware byte accounting: codes + scales, not the dense figure
+    assert pages.pool_bytes(pool, sa) == leaf.nbytes
+    dense_bytes = pages.kv_token_bytes(shape, ba, sa)
+    stored = pages.kv_token_bytes_quant(shape, ba, sa, 4, "int8")
+    assert stored == 3 * 2 * (16 * 1 + 4.0 / 4)   # L*Hkv*(hd + scale/ps)
+    assert dense_bytes / stored >= 1.8            # the capacity headroom
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quant_insert_reconstruction_error_bounded(kv_dtype):
+    """insert + gather round-trips within half a quantization step of each
+    page's own scale (int8: |err| <= scale/2 elementwise)."""
+    shape, ba, sa = _quant_shape()
+    pool = pages.make_pool(shape, ba, sa, num_pages=7, page_size=4,
+                           kv_dtype=kv_dtype)
+    rng = np.random.default_rng(0)
+    cache = jnp.asarray(rng.standard_normal((3, 1, 2, 24, 16)), jnp.bfloat16)
+    table = jnp.arange(1, 7, dtype=jnp.int32)
+    pool_k = pages.insert_tree(pool["k"], cache, table, jnp.int32(0),
+                               ba["k"], sa["k"], n_tokens=jnp.int32(24))
+    view = pages.gather_view(pool_k, table[None, :], ba["k"], sa["k"])
+    err = jnp.abs(view.astype(jnp.float32) - cache.astype(jnp.float32))
+    # per-(L, page, Hkv) bound, broadcast back over (ps, hd)
+    sc = pool_k.scales[:, table]                  # (L, P, Hkv)
+    sc = jnp.repeat(sc, 4, axis=1)                # (L, S, Hkv)
+    bound = jnp.moveaxis(sc, 1, 2)[:, None, :, :, None]     # (L, 1, Hkv, S, 1)
+    # int8: half a quantization step.  fp8 e4m3: half-ulp <= |code|/16 with
+    # |code| <= 448, so 28 scale-units bounds it uniformly.
+    half = 0.5 if kv_dtype == "int8" else 28.0
+    assert bool(jnp.all(err <= bound * half + 1e-6))
+
+
+def test_quant_fresh_page_resets_stale_scale():
+    """A freed/evicted page reused by a new sequence must NOT inherit the
+    old tenant's coarse scale: the off==0 append zeroes the stale scale
+    and re-encodes from the fresh content alone."""
+    codes = jnp.zeros((3, 4, 2, 8), jnp.int8)     # (N, ps, Hkv, hd)
+    scales = jnp.zeros((3, 2), jnp.float32)
+    big = 512.0 * jnp.ones((1, 2, 8), jnp.bfloat16)
+    from repro.models.layers import quant_page_append
+    codes, scales = quant_page_append(codes, scales, big,
+                                      jnp.array([1]), jnp.array([0]), "int8")
+    coarse = float(scales[1, 0])
+    assert coarse >= 512.0 / 127
+    # page 1 is recycled: a small token appended at offset 0 starts over
+    small = 0.25 * jnp.ones((1, 2, 8), jnp.bfloat16)
+    codes, scales = quant_page_append(codes, scales, small,
+                                      jnp.array([1]), jnp.array([0]), "int8")
+    assert float(scales[1, 0]) < coarse / 100
+    deq = codes[1, 0].astype(jnp.float32) * scales[1][:, None]
+    np.testing.assert_allclose(np.asarray(deq), 0.25, atol=1e-3)
+    # within a page lifetime the scale is monotone: a later, larger token
+    # recoarsens, an offset>0 smaller one never shrinks it
+    codes, scales = quant_page_append(codes, scales, big,
+                                      jnp.array([1]), jnp.array([1]), "int8")
+    grown = float(scales[1, 0])
+    assert grown >= coarse
+    codes, scales = quant_page_append(codes, scales, small,
+                                      jnp.array([1]), jnp.array([2]), "int8")
+    assert float(scales[1, 0]) == grown
+
+
+class _QuantStub(pages.PagedEngineMixin):
+    """Minimal Mixin host: just enough state for apply_cow_copies and the
+    _kv_bytes accounting helper."""
+    def __init__(self, pager, kv_quant_tok_bytes, kv_tok_bytes):
+        from repro.core.splitbrain import TrafficMeter
+        self._pager = pager
+        self._paging_active = True
+        self.meter = TrafficMeter()
+        self._kv_quant_tok_bytes = kv_quant_tok_bytes
+        self._kv_tok_bytes = kv_tok_bytes
+        self._kv_dtype = "int8"
+
+
+def test_quant_scales_follow_pages_through_cow_copy():
+    """apply_cow_copies moves codes AND scales src -> dst: the private
+    copy dequantizes to exactly the shared page's values, and the metered
+    copy bytes are the quantized page figure."""
+    shape, ba, sa = _quant_shape()
+    pool = pages.make_pool(shape, ba, sa, num_pages=7, page_size=4,
+                           kv_dtype="int8")
+    rng = np.random.default_rng(1)
+    cache = jnp.asarray(rng.standard_normal((3, 1, 2, 24, 16)), jnp.bfloat16)
+    table = jnp.arange(1, 7, dtype=jnp.int32)
+    pool = dict(pool, k=pages.insert_tree(pool["k"], cache, table,
+                                          jnp.int32(0), ba["k"], sa["k"],
+                                          n_tokens=jnp.int32(24)))
+    stored = pages.kv_token_bytes_quant(shape, ba, sa, 4, "int8")
+    pager = pages.HostPager(page_size=4, num_pages=7, max_len=24)
+    eng = _QuantStub(pager, stored, pages.kv_token_bytes(shape, ba, sa))
+    out = eng.apply_cow_copies(pool, [(2, 5)], ba, sa)
+    np.testing.assert_array_equal(np.asarray(out["k"].codes[:, 5]),
+                                  np.asarray(out["k"].codes[:, 2]))
+    np.testing.assert_array_equal(np.asarray(out["k"].scales[:, 5]),
+                                  np.asarray(out["k"].scales[:, 2]))
+    # the copy is metered in STORAGE bytes (quantized), not dense bytes
+    assert eng.meter.host_channel_bytes("page_cow_copy") == \
+        int(round(4 * stored))
+
+
+def test_check_kv_dtype_validation():
+    assert pages.check_kv_dtype("bf16", None) == "bf16"
+    assert pages.check_kv_dtype("int8", 8) == "int8"
+    assert pages.check_kv_dtype("fp8", 8) == "fp8"
+    with pytest.raises(ValueError, match="kv_dtype"):
+        pages.check_kv_dtype("int4", 8)
+    with pytest.raises(ValueError, match="page_size"):
+        pages.check_kv_dtype("int8", None)

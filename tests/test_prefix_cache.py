@@ -264,3 +264,73 @@ def test_request_latency_metrics():
 def test_prefix_cache_knob_validation():
     with pytest.raises(ValueError):
         _lm_engine("sometimes")
+
+
+# ------------------------------------------- quantized pools (DESIGN.md §13)
+def test_prefix_identity_and_kv_read_shrink_under_int8():
+    """kv_dtype='int8': prefix cache ON stays token-identical to OFF (the
+    shared pages quantize once at publish; later consumers dequantize the
+    same codes — fake-quant during prefill makes both paths attend to the
+    stored values), eq. 7-10 boundary bytes stay byte-identical to the
+    bf16 pool, and the host_read KV channel shrinks ~2x (1-byte codes plus
+    page-amortized scales vs 2-byte bf16)."""
+    prompts = None
+
+    def run(kv_dtype, prefix):
+        nonlocal prompts
+        cfg, eng = _lm_engine(prefix, kv_dtype=kv_dtype)
+        if prompts is None:
+            prompts = _shared_prefix_prompts(cfg)
+        sched = ContinuousBatchingScheduler(eng, max_slots=3,
+                                            prefill_chunk=8)
+        out = sched.run([Request(uid=i, prompt=p, max_new=6)
+                         for i, p in enumerate(prompts)])
+        return out, eng
+
+    base, eng_bf = run("bf16", "off")
+    off, eng_off = run("int8", "off")
+    on, eng_on = run("int8", "on")
+    # the identity gate: quantized ON == quantized OFF, token for token
+    for a, b in zip(off["results"], on["results"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert on["cached_prompt_tokens"] > 0
+    assert on["results"][-1].cached_tokens == len(prompts[-1]) - 1
+    # eq. 7-10 channels are byte-exact vs the bf16 pool (quantization only
+    # changes host-local storage, never the boundary accounting)
+    assert eng_off.measured_bytes() == eng_bf.measured_bytes()
+    # host_read KV bytes/token shrink ~2x: (hd + 4/ps) vs 2*hd per head
+    rb = eng_bf.meter.host_channel_bytes("kv_cache_read")
+    ri = eng_off.meter.host_channel_bytes("kv_cache_read")
+    assert rb > 0 and 1.8 <= rb / ri <= 2.0
+
+
+def test_splitbrain_prefix_identity_under_int8():
+    """Split-brain engine: same ON == OFF identity gate on its stacked
+    (L, ...) quantized pools, CoW included."""
+    cfg = get_config("tinyllama-1.1b").reduced(vocab_size=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, 120, (16,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, 120, (t,)).astype(np.int32)])
+               for t in (2, 5, 3)]
+    prompts.append(shared.copy())
+
+    def run(prefix):
+        eng = SplitBrainEngine(cfg, params, max_len=64, quantize=False,
+                               page_size=8, num_pages=25,
+                               prefix_cache=prefix, kv_dtype="int8")
+        sched = ContinuousBatchingScheduler(eng, max_slots=2,
+                                            prefill_chunk=8)
+        return sched.run([Request(uid=i, prompt=p, max_new=5)
+                          for i, p in enumerate(prompts)]), eng, sched
+
+    off, _, _ = run("off")
+    on, eng, sched = run("on")
+    for a, b in zip(off["results"], on["results"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert on["cached_prompt_tokens"] > 0
+    stats = eng.cache_stats(sched.cache)
+    assert stats["kv_dtype"] == "int8"
+    assert stats["cow_copies"] >= 1              # whole-prompt repeat
+    assert stats["kv_token_bytes_stored"] < eng._kv_tok_bytes
